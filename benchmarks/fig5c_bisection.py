@@ -1,0 +1,30 @@
+"""Fig 5c: bisection bandwidth (endpoint-normalised), SF via spectral+KL
+partitioning, others analytic (paper's own method mix)."""
+
+from repro.core import build_slimfly
+from repro.core.bisection import analytic_bisection_bw, bisection_channels
+from repro.core.topologies import build_dln
+
+
+def run(fast: bool = True):
+    rows = []
+    for q in ([5, 7] if fast else [5, 7, 11, 13, 19]):
+        sf = build_slimfly(q)
+        cut = bisection_channels(sf, refine_iters=100 if fast else 500)
+        # normalise by endpoints: channels crossing / (N/2) endpoints/side
+        rows.append(dict(name=f"fig5c/bisect_channels/sf-q{q}",
+                         N=sf.n_endpoints, cut=cut,
+                         derived=round(cut / (sf.n_endpoints / 2), 4)))
+    d = build_dln(128, 4, seed=2)
+    cut = bisection_channels(d, refine_iters=100)
+    rows.append(dict(name="fig5c/bisect_channels/dln-128",
+                     derived=round(cut / (d.n_endpoints / 2), 4)))
+    for fam, N, kp, p in [("hypercube", 8192, 13, 1),
+                          ("fattree3", 10648, 44, 22),
+                          ("dragonfly", 9702, 20, 7),
+                          ("torus3d", 10648, 6, 1),
+                          ("longhop", 8192, 19, 1)]:
+        bw = analytic_bisection_bw(fam, N, kp, p)
+        rows.append(dict(name=f"fig5c/bisect_norm/{fam}",
+                         derived=round(bw / (N / 2), 4)))
+    return rows

@@ -1,0 +1,57 @@
+"""Fig 6: latency/throughput of MIN / VAL / UGAL-L / UGAL-G on SF vs
+DF-UGAL-L and FT-ANCA(ecmp), under uniform, shift and worst-case traffic.
+
+fast mode: q=5 Slim Fly (N=200), short runs — trends, not absolute values.
+full mode (REPRO_FULL=1): q=19 (N=10830, the paper's network).
+"""
+
+import os
+
+from repro.core import build_slimfly
+from repro.core.topologies import build_dragonfly, build_fattree3
+from repro.sim import SimConfig, SimTables, make_traffic, simulate
+
+
+def run(fast: bool = True):
+    full = os.environ.get("REPRO_FULL", "0") == "1" or not fast
+    q = 19 if full else 5
+    cycles, warmup = (3000, 1000) if full else (700, 250)
+
+    sf = SimTables.build(build_slimfly(q))
+    df = SimTables.build(build_dragonfly(h=7 if full else 2))
+    ft = SimTables.build(build_fattree3(p=22 if full else 4), ecmp=True)
+
+    rows = []
+
+    def sim(tables, pattern, mode, rate, tag):
+        tr = make_traffic(tables, pattern)
+        r = simulate(tables, tr, SimConfig(
+            injection_rate=rate, cycles=cycles, warmup=warmup, mode=mode,
+            lookahead=6 if full else 4))
+        rows.append(dict(name=f"fig6/{tag}/{pattern}/{mode}@{rate}",
+                         accepted=round(r.accepted_load, 4),
+                         latency=round(r.avg_latency, 2),
+                         derived=round(r.accepted_load, 4)))
+        return r
+
+    # --- 6a uniform: low-load latency + saturation throughput
+    loads = [0.1, 0.5, 0.8] if not full else [0.1, 0.3, 0.5, 0.7, 0.9]
+    for rate in loads:
+        for mode in ["min", "val", "ugal_l", "ugal_g"]:
+            sim(sf, "uniform", mode, rate, "sf")
+        sim(df, "uniform", "ugal_l", rate, "df")
+        sim(ft, "uniform", "ecmp", rate, "ft3")
+
+    # --- 6b/6c shift + shuffle
+    for pattern in ["shift", "shuffle"]:
+        for mode in ["min", "ugal_l"]:
+            sim(sf, pattern, mode, 0.3, "sf")
+        sim(df, pattern, "ugal_l", 0.3, "df")
+
+    # --- 6d worst-case
+    wc_rates = [0.2, 0.5]
+    for rate in wc_rates:
+        for mode in ["min", "val", "ugal_l"]:
+            sim(sf, "worstcase_sf", mode, rate, "sf")
+        sim(df, "worstcase_df", "ugal_l", rate, "df")
+    return rows

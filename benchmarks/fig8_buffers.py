@@ -1,0 +1,35 @@
+"""Fig 8a: router buffer-size study (worst-case traffic); Fig 8b-e:
+oversubscribed Slim Fly variants."""
+
+from repro.core import build_slimfly
+from repro.sim import SimConfig, SimTables, make_traffic, simulate
+
+
+def run(fast: bool = True):
+    rows = []
+    q = 5
+    cycles, warmup = (600, 200) if fast else (2000, 700)
+
+    # --- 8a: buffer sizes (total flits/port = 4 VCs * q_net)
+    tables = SimTables.build(build_slimfly(q))
+    wc = make_traffic(tables, "worstcase_sf")
+    for q_net in ([4, 16, 64] if fast else [2, 4, 8, 16, 32, 64]):
+        r = simulate(tables, wc, SimConfig(
+            injection_rate=0.4, cycles=cycles, warmup=warmup,
+            mode="ugal_l", q_net=q_net))
+        rows.append(dict(name=f"fig8a/buffers/{4*q_net}flits",
+                         latency=round(r.avg_latency, 2),
+                         derived=round(r.accepted_load, 4)))
+
+    # --- 8b-e: oversubscription (p > balanced)
+    for p in ([4, 5, 6] if fast else [4, 5, 6, 7]):
+        topo = build_slimfly(q, p=p)
+        t = SimTables.build(topo)
+        uni = make_traffic(t, "uniform")
+        r = simulate(t, uni, SimConfig(injection_rate=0.7, cycles=cycles,
+                                       warmup=warmup, mode="min"))
+        rows.append(dict(name=f"fig8be/oversub/p{p}",
+                         N=topo.n_endpoints,
+                         latency=round(r.avg_latency, 2),
+                         derived=round(r.accepted_load, 4)))
+    return rows

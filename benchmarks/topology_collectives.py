@@ -1,0 +1,41 @@
+"""Beyond-paper: topology-aware collective cost model — Slim Fly as an ML
+training fabric vs Dragonfly / fat tree (repro.dist.topology_aware).
+
+Scores ring vs direct algorithms for the collectives the dry-run emits
+(DP all-reduce of gradients, MoE all-to-all) on each fabric.
+"""
+
+import numpy as np
+
+from repro.core import build_slimfly
+from repro.core.topologies import build_dragonfly, build_fattree3
+from repro.dist.topology_aware import FabricModel
+
+
+def run(fast: bool = True):
+    rows = []
+    fabrics = [
+        ("sf-q7", FabricModel(build_slimfly(7))),
+        ("df-h3", FabricModel(build_dragonfly(h=3))),
+        ("ft3-p8", FabricModel(build_fattree3(p=8))),
+    ]
+    group = 64          # a 64-node DP group
+    payload = 2 * 2.6e9           # gemma2-2b bf16 gradients
+    moe_payload = 64e6            # one MoE layer's a2a shard
+
+    for name, fm in fabrics:
+        est = fm.estimate("all_reduce", payload,
+                          np.arange(0, fm.n_nodes,
+                                    max(1, fm.n_nodes // group))[:group])
+        rows.append(dict(name=f"collectives/allreduce_ring/{name}",
+                         derived=round(est["ring"].time_s * 1e3, 3)))
+        rows.append(dict(name=f"collectives/allreduce_direct/{name}",
+                         derived=round(est["direct"].time_s * 1e3, 3)))
+        rows.append(dict(name=f"collectives/allreduce_best/{name}",
+                         algo=est["best"].algorithm,
+                         derived=round(est["best"].time_s * 1e3, 3)))
+        a2a = fm.estimate("all_to_all", moe_payload,
+                          np.arange(min(16, fm.n_nodes)))
+        rows.append(dict(name=f"collectives/moe_a2a_best/{name}",
+                         derived=round(a2a["best"].time_s * 1e6, 1)))
+    return rows

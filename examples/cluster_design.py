@@ -1,0 +1,50 @@
+"""Cluster designer: given a target endpoint count and router radix,
+enumerate balanced Slim Fly configurations (paper §VII-A library) and
+compare cost/power/latency against Dragonfly and fat-tree alternatives.
+
+  PYTHONPATH=src python examples/cluster_design.py --endpoints 10000
+"""
+
+import argparse
+
+from repro.core import (build_slimfly, enumerate_slimfly_configs,
+                        slimfly_params)
+from repro.core.cost import network_cost, network_power
+from repro.core.topologies import build_dragonfly, build_fattree3
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--endpoints", type=int, default=10_000)
+    args = ap.parse_args()
+    N = args.endpoints
+
+    print(f"=== balanced Slim Fly library up to {2*N} endpoints ===")
+    lib = enumerate_slimfly_configs(2 * N)
+    for c in lib:
+        mark = " <-- closest" if abs(c["n_endpoints"] - N) == min(
+            abs(x["n_endpoints"] - N) for x in lib) else ""
+        print(f"  q={c['q']:3d}  k={c['router_radix']:3d} "
+              f"N_r={c['n_routers']:5d}  N={c['n_endpoints']:6d}{mark}")
+
+    best = min(lib, key=lambda c: abs(c["n_endpoints"] - N))
+    sf = build_slimfly(best["q"])
+    candidates = [("slimfly", sf)]
+    h = (best["router_radix"] + 1) // 4
+    candidates.append(("dragonfly", build_dragonfly(h=h)))
+    candidates.append(("fattree3", build_fattree3(p=best["router_radix"]
+                                                  // 2)))
+
+    print(f"\n=== designs near N={N} ===")
+    print(f"{'topology':10s} {'N':>7s} {'routers':>8s} {'diam':>5s} "
+          f"{'$ / node':>9s} {'W / node':>9s}")
+    for name, topo in candidates:
+        c = network_cost(topo)
+        p = network_power(topo)
+        print(f"{name:10s} {topo.n_endpoints:7d} {topo.n_routers:8d} "
+              f"{topo.diameter():5d} {c['per_endpoint']:9.0f} "
+              f"{p['per_endpoint_w']:9.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: build a Slim Fly, check the paper's headline properties,
+and price it against a Dragonfly.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import build_slimfly, moore_bound, slimfly_params
+from repro.core.cost import network_cost, network_power
+from repro.core.routing import (analytic_channel_load, build_routing,
+                                channel_load_uniform, is_deadlock_free)
+from repro.core.topologies import build_dragonfly
+
+
+def main():
+    q = 19                                   # the paper's flagship network
+    par = slimfly_params(q)
+    print(f"Slim Fly q={q}: N_r={par['n_routers']} routers, "
+          f"k'={par['kprime']}, p={par['p']}, N={par['n_endpoints']} "
+          f"endpoints")
+
+    topo = build_slimfly(q)
+    print(f"  diameter          = {topo.diameter()}  (claim: 2)")
+    print(f"  avg endpoint hops = {topo.average_endpoint_hops():.3f}")
+    mb = moore_bound(par["kprime"], 2)
+    print(f"  Moore-bound ratio = {par['n_routers'] / mb:.2%}")
+
+    rt = build_routing(topo)
+    avg_l, max_l = channel_load_uniform(rt)
+    print(f"  channel load      = {avg_l:.1f} avg / {max_l:.1f} max "
+          f"(analytic {analytic_channel_load(par['kprime'], par['n_routers'], par['p']):.1f})")
+
+    paths = [rt.min_path(s, d) for s in range(0, topo.n_routers, 7)
+             for d in range(0, topo.n_routers, 11) if s != d]
+    print(f"  MIN deadlock-free with 2 VCs: "
+          f"{is_deadlock_free(paths, topo.n_routers)}")
+
+    sf_cost = network_cost(topo, router_radix=43)
+    sf_pow = network_power(topo, router_radix=43)
+    df = build_dragonfly(h=11, a=22, p=11)   # same radix (43)
+    df_cost = network_cost(df, router_radix=43)
+    df_pow = network_power(df, router_radix=43)
+    print(f"  cost/endpoint     = ${sf_cost['per_endpoint']:.0f} "
+          f"(DF same radix: ${df_cost['per_endpoint']:.0f}; "
+          f"SF saves {1 - sf_cost['per_endpoint']/df_cost['per_endpoint']:.0%})")
+    print(f"  power/endpoint    = {sf_pow['per_endpoint_w']:.2f} W "
+          f"(DF: {df_pow['per_endpoint_w']:.2f} W)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""End-to-end driver (deliverable b): train a ~100M-param dense LM for a
+few hundred steps with the full framework stack — synthetic data pipeline,
+AdamW, checkpoint/restart, fault monitor — and report the topology-aware
+collective estimate for the gradient all-reduce on a Slim Fly vs Dragonfly
+fabric.
+
+  PYTHONPATH=src python examples/train_topology_aware.py \
+      [--steps 300] [--d-model 512] [--layers 8]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import build_slimfly
+from repro.core.topologies import build_dragonfly
+from repro.data import SyntheticLM
+from repro.dist.topology_aware import FabricModel
+from repro.launch.faults import FaultMonitor
+from repro.models.model import init_params, param_count
+from repro.optim import AdamWConfig
+from repro.train import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="lm-100m", family="dense", n_layers=args.layers,
+        d_model=args.d_model, n_heads=8, n_kv_heads=4,
+        d_ff=4 * args.d_model, vocab=32_000, scan_layers=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n = param_count(params)
+    print(f"model: {n/1e6:.1f}M params, {args.layers}L x {args.d_model}")
+
+    data = SyntheticLM(cfg.vocab, args.seq, args.batch, seed=7)
+    opt_cfg = AdamWConfig(lr_peak=3e-4, warmup_steps=50,
+                          total_steps=args.steps)
+    tc = TrainConfig(ckpt_dir=args.ckpt_dir, ckpt_every=100, log_every=20)
+    monitor = FaultMonitor()
+
+    t0 = time.time()
+    params, _, hist = train(cfg, opt_cfg, tc, data, params, args.steps,
+                            monitor=monitor)
+    dt = time.time() - t0
+    losses = [h["loss"] for h in hist]
+    print(f"trained {args.steps} steps in {dt:.0f}s "
+          f"({args.steps*args.batch*args.seq/dt:.0f} tok/s)")
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(improved: {losses[-1] < losses[0]})")
+    print(f"stragglers observed: {len(monitor.straggler_events)}")
+
+    # --- the paper's contribution applied to this job's collectives
+    grad_bytes = 4.0 * n
+    for name, topo in [("slimfly-q7", build_slimfly(7)),
+                       ("dragonfly-h3", build_dragonfly(h=3))]:
+        fm = FabricModel(topo)
+        group = np.arange(0, fm.n_nodes, max(1, fm.n_nodes // 64))[:64]
+        est = fm.estimate("all_reduce", grad_bytes, group)
+        b = est["best"]
+        print(f"DP grad all-reduce on {name:14s}: {b.time_s*1e3:7.2f} ms "
+              f"({b.algorithm}; ring would be "
+              f"{est['ring'].time_s*1e3:.2f} ms)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Regenerate the EXPERIMENTS.md appendix tables from the sweep jsons.
+
+  PYTHONPATH=src python scripts/make_tables.py >> EXPERIMENTS.md
+"""
+
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def load(name):
+    path = os.path.join(ROOT, "results", name)
+    return json.load(open(path)) if os.path.exists(path) else []
+
+
+def key(r):
+    return (r["arch"], r["shape"])
+
+
+def fmt_row(r, base):
+    if r.get("status") == "SKIP":
+        return (f"| {r['arch']} | {r['shape']} | SKIP (full attention "
+                f"@500k) | | | | | | |")
+    b = base.get(key(r), {})
+    bm = b.get("mfu")
+    delta = (f"{r['mfu']/bm:.1f}x" if bm and r.get("mfu") else "—")
+    return ("| {arch} | {shape} | {tc:.3f} | {tm:.3f} | {tcoll:.3f} | "
+            "{bn} | {peak:.2f} | {mfu:.3f} | {d} |").format(
+        arch=r["arch"], shape=r["shape"], tc=r["t_compute"],
+        tm=r["t_memory"], tcoll=r["t_collective"], bn=r["bottleneck"],
+        peak=r["peak_bytes_per_dev"] / 2**30, mfu=r["mfu"], d=delta)
+
+
+def main():
+    single = load("dryrun_single.json")
+    base = {key(r): r for r in load("dryrun_single_baseline.json")
+            if r.get("status") == "ok"}
+
+    print("\n## Appendix A — roofline, all 40 cells, 16x16 mesh "
+          "(optimized build)\n")
+    print("| arch | shape | t_compute s | t_memory s | t_collective s | "
+          "bottleneck | peak GiB/dev | mfu-bound | vs baseline |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in single:
+        print(fmt_row(r, base))
+
+    multi = load("dryrun_multipod.json")
+    if multi:
+        print("\n## Appendix B — multi-pod 2x16x16 (512 chips)\n")
+        print("| arch | shape | bottleneck | peak GiB/dev | mfu-bound |")
+        print("|---|---|---|---|---|")
+        for r in multi:
+            if r.get("status") == "SKIP":
+                print(f"| {r['arch']} | {r['shape']} | SKIP | | |")
+            else:
+                print(f"| {r['arch']} | {r['shape']} | {r['bottleneck']} | "
+                      f"{r['peak_bytes_per_dev']/2**30:.2f} | "
+                      f"{r['mfu']:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Slim Fly core: the paper's primary contribution.
+
+- mms:      SF MMS diameter-2 construction over GF(q) (paper §II-B)
+- moore:    Moore bound + optimality comparisons (§II-A, Fig 5)
+- topology: graph abstraction + exact oracles
+- topologies: comparison networks (Table II)
+- routing:  MIN/VAL/UGAL path generation, VC assignment, deadlock proofs (§IV)
+- resiliency: link-failure analyses (§III-D)
+- cost:     cost/power/layout models (§VI)
+"""
+
+from .gf import GF, factor_prime_power, is_prime
+from .mms import (
+    SlimFly,
+    balanced_concentration,
+    build_slimfly,
+    enumerate_slimfly_configs,
+    slimfly_params,
+    valid_q,
+)
+from .moore import moore_bound
+from .topology import Topology, bfs_all_pairs
+
+__all__ = [
+    "GF",
+    "factor_prime_power",
+    "is_prime",
+    "SlimFly",
+    "balanced_concentration",
+    "build_slimfly",
+    "enumerate_slimfly_configs",
+    "slimfly_params",
+    "valid_q",
+    "moore_bound",
+    "Topology",
+    "bfs_all_pairs",
+]

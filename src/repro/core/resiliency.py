@@ -1,0 +1,127 @@
+"""Resiliency analyses under random link failures (paper §III-D).
+
+Three metrics, each reported as the maximum fraction of links that can be
+removed while the network (majority of samples) still satisfies:
+  - 'disconnect':  stays connected                       (§III-D1, Table III)
+  - 'diameter':    diameter <= original + 2              (§III-D2)
+  - 'avgpath':     average path length <= original + 1   (§III-D3)
+
+Engines: 'scipy' (C BFS — large networks), 'kernel' (batched Pallas
+min-plus APSP — exercises the TPU path, used for small networks/tests).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Literal, Optional
+
+import numpy as np
+import scipy.sparse as sp
+import scipy.sparse.csgraph as csgraph
+
+from ..kernels import apsp
+from .topology import Topology
+
+__all__ = ["failure_sample", "metric_after_failures", "resilience_sweep",
+           "max_tolerated_fraction"]
+
+Metric = Literal["disconnect", "diameter", "avgpath"]
+
+
+def failure_sample(topo: Topology, fraction: float, rng: np.random.Generator
+                   ) -> np.ndarray:
+    """Remove floor(fraction * |E|) random undirected edges; returns adj."""
+    edges = topo.edge_list()
+    n_kill = int(np.floor(fraction * len(edges)))
+    kill = rng.choice(len(edges), size=n_kill, replace=False)
+    adj = topo.adj.copy()
+    e = edges[kill]
+    adj[e[:, 0], e[:, 1]] = False
+    adj[e[:, 1], e[:, 0]] = False
+    return adj
+
+
+def _scipy_metrics(adj: np.ndarray):
+    g = sp.csr_matrix(adj)
+    n_comp, _ = csgraph.connected_components(g, directed=False)
+    if n_comp > 1:
+        return False, np.inf, np.inf
+    d = csgraph.shortest_path(g, method="D", unweighted=True, directed=False)
+    n = adj.shape[0]
+    return True, float(d.max()), float(d.sum() / (n * (n - 1)))
+
+
+def _kernel_metrics(adj_batch: np.ndarray):
+    """Batched metrics via the Pallas min-plus APSP kernel."""
+    n = adj_batch.shape[-1]
+    d = np.asarray(apsp(adj_batch, max_diameter=n))
+    reachable = d < 1e37
+    out = []
+    for i in range(adj_batch.shape[0]):
+        di = d[i]
+        if not reachable[i].all():
+            out.append((False, np.inf, np.inf))
+        else:
+            out.append((True, float(di.max()),
+                        float(di.sum() / (n * (n - 1)))))
+    return out
+
+
+def metric_after_failures(topo: Topology, fraction: float, metric: Metric,
+                          n_samples: int, seed: int = 0,
+                          engine: str = "scipy",
+                          base_diameter: Optional[float] = None,
+                          base_avgpath: Optional[float] = None) -> float:
+    """Fraction of samples that SURVIVE the metric threshold."""
+    rng = np.random.default_rng(seed)
+    if metric in ("diameter", "avgpath") and (base_diameter is None
+                                              or base_avgpath is None):
+        ok, base_diameter, base_avgpath = _scipy_metrics(topo.adj)
+        assert ok
+
+    samples = [failure_sample(topo, fraction, rng) for _ in range(n_samples)]
+    if engine == "kernel":
+        results = _kernel_metrics(np.stack(samples))
+    else:
+        results = [_scipy_metrics(a) for a in samples]
+
+    ok_count = 0
+    for connected, diam, avgp in results:
+        if metric == "disconnect":
+            ok_count += connected
+        elif metric == "diameter":
+            ok_count += connected and diam <= base_diameter + 2
+        else:
+            ok_count += connected and avgp <= base_avgpath + 1
+    return ok_count / n_samples
+
+
+def resilience_sweep(topo: Topology, metric: Metric = "disconnect",
+                     n_samples: int = 20, seed: int = 0,
+                     engine: str = "scipy",
+                     fractions: Optional[np.ndarray] = None
+                     ) -> Dict[float, float]:
+    """Survival rate at each failure fraction (5% increments, paper style)."""
+    if fractions is None:
+        fractions = np.arange(0.05, 1.0, 0.05)
+    ok, bd, bp = _scipy_metrics(topo.adj)
+    assert ok, "baseline topology disconnected"
+    out = {}
+    for f in fractions:
+        rate = metric_after_failures(topo, float(f), metric, n_samples,
+                                     seed=seed + int(f * 1000), engine=engine,
+                                     base_diameter=bd, base_avgpath=bp)
+        out[round(float(f), 2)] = rate
+        if rate == 0.0:   # monotone enough in practice — stop early
+            break
+    return out
+
+
+def max_tolerated_fraction(sweep: Dict[float, float],
+                           threshold: float = 0.5) -> float:
+    """Largest tested fraction whose survival rate >= threshold (the
+    Table III number)."""
+    best = 0.0
+    for f in sorted(sweep):
+        if sweep[f] >= threshold:
+            best = f
+    return best

@@ -1,0 +1,196 @@
+"""Routing for Slim Fly and comparison topologies (paper §IV).
+
+- RoutingTables: distance matrix (via the Pallas min-plus APSP kernel) and
+  next-hop tables for MIN routing, plus full equal-cost next-hop sets for
+  path-diversity / UGAL candidate generation.
+- Valiant (VAL) path construction.
+- Hop-indexed virtual-channel assignment (§IV-D, Gopal's scheme) and the
+  channel-dependency-graph acyclicity check that *proves* deadlock freedom
+  for a given (topology, path set, VC count).
+- channel_load: average/max minimal-route load per directed channel, the
+  quantity behind the balanced-concentration formula (§II-B2) and the
+  topology-aware collective cost model (repro.dist.topology_aware).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..kernels import apsp
+from .topology import Topology
+
+__all__ = [
+    "RoutingTables",
+    "build_routing",
+    "valiant_path",
+    "assign_vcs",
+    "channel_dependency_graph",
+    "is_deadlock_free",
+    "channel_load_uniform",
+    "analytic_channel_load",
+]
+
+
+@dataclasses.dataclass
+class RoutingTables:
+    topo: Topology
+    dist: np.ndarray             # [N_r, N_r] int16 hop distances
+    next_hop: np.ndarray         # [N_r, N_r] int32 deterministic MIN next hop
+    next_hops_all: List[List[np.ndarray]] | None  # equal-cost sets (optional)
+
+    def min_path(self, s: int, d: int) -> List[int]:
+        """Deterministic minimal path (router sequence, inclusive)."""
+        path = [s]
+        cur = s
+        while cur != d:
+            cur = int(self.next_hop[cur, d])
+            path.append(cur)
+            assert len(path) <= self.dist[s, d] + 1
+        return path
+
+    def min_paths_all(self, s: int, d: int) -> List[List[int]]:
+        """All shortest paths (for path-diversity analysis; D <= 2 graphs)."""
+        if s == d:
+            return [[s]]
+        if self.topo.adj[s, d]:
+            return [[s, d]]
+        mids = np.nonzero(self.topo.adj[s] & self.topo.adj[d])[0]
+        if len(mids):
+            return [[s, int(m), d] for m in mids]
+        # fall back to generic DFS along decreasing distance
+        out = []
+        for n in np.nonzero(self.topo.adj[s])[0]:
+            if self.dist[n, d] == self.dist[s, d] - 1:
+                out.extend([[s] + rest for rest in self.min_paths_all(int(n), d)])
+        return out
+
+
+def build_routing(topo: Topology, use_pallas: bool = True,
+                  equal_cost_sets: bool = False) -> RoutingTables:
+    n = topo.n_routers
+    max_d = topo.params.get("diameter_hint", min(n, 64))
+    d = np.asarray(apsp(topo.adj, max_diameter=max_d, use_pallas=use_pallas))
+    assert (d < 1e37).all(), "disconnected topology"
+    dist = d.astype(np.int16)
+
+    # next_hop[r, t] = lowest-index neighbor n of r with dist[n,t] = dist[r,t]-1
+    adj = topo.adj
+    next_hop = np.full((n, n), -1, dtype=np.int32)
+    for r in range(n):
+        nbrs = np.nonzero(adj[r])[0]                      # [deg]
+        # dist from each neighbor to every target: [deg, n]
+        dn = dist[nbrs, :]
+        good = dn == (dist[r, :][None, :] - 1)            # [deg, n]
+        first = np.argmax(good, axis=0)                   # lowest index
+        has = good.any(axis=0)
+        next_hop[r, has] = nbrs[first[has]]
+        next_hop[r, r] = r
+
+    all_sets = None
+    if equal_cost_sets:
+        all_sets = []
+        for r in range(n):
+            nbrs = np.nonzero(adj[r])[0]
+            dn = dist[nbrs, :]
+            good = dn == (dist[r, :][None, :] - 1)
+            all_sets.append([nbrs[good[:, t]] for t in range(n)])
+    return RoutingTables(topo=topo, dist=dist, next_hop=next_hop,
+                         next_hops_all=all_sets)
+
+
+def valiant_path(rt: RoutingTables, s: int, d: int, r_inter: int) -> List[int]:
+    """VAL (§IV-B): minimal path s -> r_inter, then r_inter -> d."""
+    first = rt.min_path(s, r_inter)
+    second = rt.min_path(r_inter, d)
+    return first + second[1:]
+
+
+def assign_vcs(path: Sequence[int]) -> List[int]:
+    """§IV-D: hop i uses VC i (2 VCs suffice for MIN on D=2, 4 for VAL)."""
+    return list(range(len(path) - 1))
+
+
+def channel_dependency_graph(paths: Sequence[Sequence[int]],
+                             n_routers: int) -> Tuple[np.ndarray, int]:
+    """Build the CDG over (directed channel, VC) nodes for a path set with
+    hop-indexed VCs.  Returns (edge list [E, 2], n_nodes).
+
+    Node id for channel (u -> v) on vc: vc * N_r^2 + u * N_r + v (dense ids,
+    sparse usage)."""
+    deps = set()
+    max_vc = 0
+    for path in paths:
+        vcs = assign_vcs(path)
+        if vcs:
+            max_vc = max(max_vc, max(vcs))
+        for i in range(len(path) - 2):
+            u, v, w = path[i], path[i + 1], path[i + 2]
+            a = vcs[i] * n_routers * n_routers + u * n_routers + v
+            b = vcs[i + 1] * n_routers * n_routers + v * n_routers + w
+            deps.add((a, b))
+    n_nodes = (max_vc + 1) * n_routers * n_routers
+    edges = np.array(sorted(deps), dtype=np.int64).reshape(-1, 2)
+    return edges, n_nodes
+
+
+def is_deadlock_free(paths: Sequence[Sequence[int]], n_routers: int) -> bool:
+    """Kahn topological sort on the CDG: acyclic <=> deadlock-free under
+    the hop-indexed VC assignment."""
+    edges, _ = channel_dependency_graph(paths, n_routers)
+    if len(edges) == 0:
+        return True
+    nodes, inv = np.unique(edges, return_inverse=True)
+    e = inv.reshape(-1, 2)
+    n = len(nodes)
+    indeg = np.zeros(n, dtype=np.int64)
+    np.add.at(indeg, e[:, 1], 1)
+    out_lists: List[List[int]] = [[] for _ in range(n)]
+    for a, b in e:
+        out_lists[a].append(b)
+    stack = list(np.nonzero(indeg == 0)[0])
+    seen = 0
+    while stack:
+        v = stack.pop()
+        seen += 1
+        for w in out_lists[v]:
+            indeg[w] -= 1
+            if indeg[w] == 0:
+                stack.append(w)
+    return seen == n
+
+
+def channel_load_uniform(rt: RoutingTables, p: Optional[int] = None
+                         ) -> Tuple[float, float]:
+    """Empirical (avg, max) channel load under all-to-all uniform traffic
+    with deterministic MIN routing (§II-B2).  Load = number of routes using
+    each directed channel, normalised by p^2 endpoint pairs per router pair.
+    Returns loads in units of routes per channel for p endpoints/router."""
+    topo = rt.topo
+    n = topo.n_routers
+    p = p if p is not None else topo.p
+    load = np.zeros((n, n), dtype=np.float64)
+    # D <= 2 fast path: direct edges get 1, two-hop routes via next_hop
+    for s in range(n):
+        t_direct = np.nonzero(topo.adj[s])[0]
+        load[s, t_direct] += 1.0
+        t_two = np.nonzero(rt.dist[s] == 2)[0]
+        mids = rt.next_hop[s, t_two]
+        np.add.at(load, (np.full_like(mids, s), mids), 1.0)
+        np.add.at(load, (mids, t_two), 1.0)
+        # distances > 2: walk (generic topologies)
+        t_far = np.nonzero(rt.dist[s] > 2)[0]
+        for t in t_far:
+            path = rt.min_path(s, int(t))
+            for u, v in zip(path[:-1], path[1:]):
+                load[u, v] += 1.0
+    chan = load[topo.adj]           # only physical channels
+    scale = p * p                    # p^2 endpoint pairs per router pair
+    return float(chan.mean() * scale), float(chan.max() * scale)
+
+
+def analytic_channel_load(kprime: int, n_r: int, p: int) -> float:
+    """Paper's closed form: l = (2 N_r - k' - 2) p^2 / k'."""
+    return (2 * n_r - kprime - 2) * p * p / kprime

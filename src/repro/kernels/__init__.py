@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+- minplus:     tiled (min,+)-semiring matmul - APSP / topology analysis
+- attn_decode: GQA flash-decode over long KV caches - serving path
+ops.py holds the jit'd public wrappers; ref.py the pure-jnp oracles.
+On non-TPU hosts every kernel runs in interpret mode (bit-accurate).
+"""
+
+from .ops import INF, apsp, decode_attention, minplus, seed_distance
+
+__all__ = ["INF", "apsp", "decode_attention", "minplus", "seed_distance"]

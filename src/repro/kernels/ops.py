@@ -1,0 +1,90 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These are the entry points the rest of the framework uses; they take care
+of padding / reshaping so kernel-side shapes stay hardware-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .attn_decode import decode_attention_pallas
+from .minplus import DEFAULT_BLOCK, minplus_pallas
+
+__all__ = ["minplus", "apsp", "seed_distance", "decode_attention", "INF"]
+
+INF = 1.0e38  # values >= INF/10 are "unreachable" by convention
+
+
+def seed_distance(adj: np.ndarray | jax.Array) -> jax.Array:
+    """Adjacency (bool, [..., N, N]) -> seeded distance matrix (f32):
+    0 on the diagonal, 1 for edges, +BIG elsewhere."""
+    adj = jnp.asarray(adj, dtype=bool)
+    n = adj.shape[-1]
+    eye = jnp.eye(n, dtype=bool)
+    d = jnp.where(adj, 1.0, 3.0e38).astype(jnp.float32)
+    return jnp.where(eye, 0.0, d)
+
+
+def minplus(a, b, *, block: int = DEFAULT_BLOCK, use_pallas: bool = True):
+    if use_pallas:
+        return minplus_pallas(a, b, block=block)
+    return ref.minplus_ref(a, b)
+
+
+def apsp(adj, *, max_diameter: int | None = None, block: int = DEFAULT_BLOCK,
+         use_pallas: bool = True):
+    """All-pairs shortest path lengths by (min,+) repeated squaring.
+
+    adj: bool adjacency [..., N, N] (batched over leading dims).
+    After t squarings the matrix holds all distances <= 2^t, so
+    ceil(log2(max_diameter)) iterations suffice; default assumes the worst
+    case (N) => ceil(log2(N)) iterations.
+    Returns float32 distances with +BIG (>= 1e38) marking unreachable pairs.
+    """
+    d = seed_distance(adj)
+    n = d.shape[-1]
+    target = max_diameter if max_diameter is not None else n
+    n_iter = max(1, int(np.ceil(np.log2(max(2, target)))))
+    for _ in range(n_iter):
+        d = minplus(d, d, block=block, use_pallas=use_pallas)
+    return d
+
+
+def decode_attention(q, k, v, length=None, *, bs: int = 512,
+                     cap: float | None = None,
+                     use_pallas: bool | None = None):
+    """GQA decode attention with automatic hardware-alignment padding.
+
+    q: [B, Hkv, G, d]; k, v: [B, Hkv, S, d]; length: [B] valid KV lengths.
+
+    use_pallas=None resolves by backend: the Pallas kernel on TPU, the
+    pure-jnp reference elsewhere (a pallas custom-call is opaque to the
+    GSPMD partitioner, which would gather sharded KV caches; the jnp path
+    partitions cleanly — sequence-sharded decode).  Kernel correctness vs
+    the reference is covered by tests with use_pallas=True (interpret).
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return ref.decode_attention_ref(q, k, v, length=length, cap=cap)
+    B, Hkv, G, d = q.shape
+    dv = v.shape[-1]
+    scale = float(1.0 / (d**0.5))  # scale by TRUE head dim before padding
+    pad_g = (-G) % 8
+    pad_d = (-d) % 128
+    pad_dv = (-dv) % 128
+    if pad_g or pad_d:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_g), (0, pad_d)))
+    if pad_d:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, pad_d)))
+    if pad_dv:
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad_dv)))
+    out = decode_attention_pallas(q, k, v, length, bs=bs, scale=scale,
+                                  cap=cap)
+    return out[:, :, :G, :dv]

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["minplus_ref", "apsp_ref", "decode_attention_ref"]
+
+
+def minplus_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C[..., i, j] = min_k A[..., i, k] + B[..., k, j] (broadcast batch)."""
+    return jnp.min(a[..., :, :, None] + b[..., None, :, :], axis=-2)
+
+
+def apsp_ref(adj_dist: jax.Array, n_iter: int) -> jax.Array:
+    """APSP by repeated (min,+) squaring of the seeded distance matrix."""
+    d = adj_dist
+    for _ in range(n_iter):
+        d = minplus_ref(d, d)
+    return d
+
+
+def decode_attention_ref(q, k, v, scale: float | None = None, length=None,
+                         cap: float | None = None):
+    """GQA decode attention oracle.
+
+    q: [B, Hkv, G, d]    (one new token; G = query heads per kv head)
+    k: [B, Hkv, S, d]
+    v: [B, Hkv, S, dv]
+    length: optional [B] valid KV length (positions >= length masked out).
+    returns [B, Hkv, G, dv]
+    """
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(q.dtype)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if cap is not None:
+        scores = cap * jnp.tanh(scores / cap)
+    if length is not None:
+        pos = jnp.arange(k.shape[2])
+        mask = pos[None, :] < length[:, None]          # [B, S]
+        scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

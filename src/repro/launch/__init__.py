@@ -1,0 +1,2 @@
+""""Launchers: mesh construction, multi-pod dry-run, train/serve drivers,
+fault-tolerance harness."""

@@ -1,0 +1,186 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import (jax locks the device count on first init).
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape) cell, lower + compile the step on
+the production mesh (16x16 single-pod and 2x16x16 multi-pod), print
+memory_analysis() (fits?) and cost_analysis() (FLOPs/bytes for the
+roofline), and dump a json row consumed by benchmarks/roofline_bench.py
+and EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b \
+      --shape train_4k [--multi-pod] [--out results.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, get
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as S
+from repro.models import model as M
+from repro.utils.roofline import model_flops, roofline_from_compiled
+
+SKIP = "SKIP"
+
+
+def cell_supported(arch: str, shape_name: str) -> bool:
+    cfg = get(arch)
+    if shape_name == "long_500k" and not cfg.supports_long:
+        return False           # pure full-attention archs (DESIGN.md §4)
+    return True
+
+
+def active_params(cfg) -> int:
+    """Active params for MoE MODEL_FLOPS (6 N_active D)."""
+    shapes = M.param_shapes(cfg)
+    total = sum(int(np.prod(s)) for s in jax.tree.leaves(
+        shapes, is_leaf=lambda x: isinstance(x, tuple)))
+    if not cfg.n_experts:
+        return total
+    moe_layers = sum(1 for s in cfg.layer_kinds() if s["ffn"] == "moe")
+    per_expert = 3 * cfg.d_model * cfg.d_ff
+    inactive = moe_layers * per_expert * (cfg.n_experts - cfg.top_k)
+    return total - inactive
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             microbatches: int = 1, remat: str = "none",
+             fsdp: bool = True, scan_layers: bool = True) -> dict:
+    import dataclasses
+    cfg = get(arch)
+    if scan_layers and not cfg.n_encoder_layers:
+        # scan-over-layers: O(1)-in-depth HLO + the scan unit carries the
+        # dots_saveable remat policy (so remat arg stays "none")
+        cfg = dataclasses.replace(cfg, scan_layers=True)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.dist.sharding import data_axes
+    tp_size = mesh.devices.shape[-1]
+    cfg = dataclasses.replace(
+        cfg, dp_axes=data_axes(mesh), tp_axis="model",
+        attn_seq_shard=(cfg.n_kv_heads % tp_size) != 0,
+        moe_ep=(cfg.n_experts % tp_size == 0) if cfg.n_experts else None,
+        moe_groups=(1 if (cfg.n_experts and cfg.n_experts % tp_size == 0)
+                    else int(np.prod(mesh.devices.shape[:-1]))))
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = int(np.prod(mesh.devices.shape))
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            opt_cfg = S.opt_config_for(cfg)
+            params = S.params_struct(cfg, mesh, jnp.bfloat16, fsdp=fsdp)
+            opt = S.opt_struct(params, opt_cfg, mesh)
+            batch = S.input_specs(arch, shape_name, mesh)
+            step = S.train_step_fn(cfg, opt_cfg, microbatches, remat)
+            lowered = jax.jit(step).lower(params, opt, batch)
+        elif shape.kind == "prefill":
+            params = S.params_struct(cfg, mesh, jnp.bfloat16)
+            batch = S.input_specs(arch, shape_name, mesh)
+            lowered = jax.jit(S.prefill_fn(cfg)).lower(params, batch)
+        else:  # decode
+            params = S.params_struct(cfg, mesh, jnp.bfloat16)
+            batch = S.input_specs(arch, shape_name, mesh)
+            cache = S.cache_struct(cfg, shape, mesh)
+            lowered = jax.jit(S.decode_fn(cfg)).lower(
+                params, batch["tokens"], cache)
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    n_total = sum(int(np.prod(s)) for s in jax.tree.leaves(
+        M.param_shapes(cfg), is_leaf=lambda x: isinstance(x, tuple)))
+    mf = model_flops(cfg, shape, n_total, active_params(cfg))
+    terms = roofline_from_compiled(
+        compiled, arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        model_flops_total=mf)
+
+    row = dict(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        status="ok", compile_s=round(time.time() - t0, 1),
+        hlo_flops_per_dev=terms.hlo_flops,
+        hlo_bytes_per_dev=terms.hlo_bytes,
+        coll_bytes_per_dev=terms.coll_bytes,
+        model_flops_total=mf,
+        t_compute=terms.t_compute, t_memory=terms.t_memory,
+        t_collective=terms.t_collective, bottleneck=terms.bottleneck,
+        useful_fraction=terms.useful_fraction, mfu=terms.mfu,
+        argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+        output_bytes=getattr(mem, "output_size_in_bytes", None),
+        temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+        # memory_analysis sums across the SPMD replicas -> per device:
+        peak_bytes_per_dev=(getattr(mem, "argument_size_in_bytes", 0)
+                            + getattr(mem, "output_size_in_bytes", 0)
+                            + getattr(mem, "temp_size_in_bytes", 0)) / chips,
+    )
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-scan", action="store_true")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for a in sorted(ARCHS):
+            for s in ["train_4k", "prefill_32k", "decode_32k", "long_500k"]:
+                cells.append((a, s, args.multi_pod))
+    else:
+        assert args.arch and args.shape
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    rows = []
+    for arch, shape, mp in cells:
+        if not cell_supported(arch, shape):
+            rows.append(dict(arch=arch, shape=shape,
+                             mesh="2x16x16" if mp else "16x16",
+                             status=SKIP,
+                             reason="pure full-attention arch at 500k "
+                                    "(DESIGN.md §4)"))
+            print(f"[dryrun] {arch:28s} {shape:12s} SKIP")
+            continue
+        try:
+            row = run_cell(arch, shape, mp, args.microbatches, args.remat,
+                           fsdp=not args.no_fsdp,
+                           scan_layers=not args.no_scan)
+            rows.append(row)
+            print(f"[dryrun] {arch:28s} {shape:12s} {row['mesh']:8s} OK "
+                  f"compile {row['compile_s']:6.1f}s "
+                  f"peak/dev {row['peak_bytes_per_dev']/2**30:6.2f} GiB "
+                  f"bottleneck {row['bottleneck']:10s} "
+                  f"mfu-bound {row['mfu']:.3f}")
+        except Exception as e:
+            traceback.print_exc()
+            rows.append(dict(arch=arch, shape=shape, status="FAIL",
+                             error=str(e)[:500]))
+            print(f"[dryrun] {arch:28s} {shape:12s} FAIL {e}")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+    ok = all(r["status"] in ("ok", SKIP) for r in rows)
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

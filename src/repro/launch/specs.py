@@ -1,0 +1,145 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell:
+weak-type-correct, shardable, zero device allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, ModelConfig, ShapeSpec, get
+from ..dist.sharding import (batch_spec, cache_specs, data_axes,
+                             param_specs, sanitize_spec)
+from ..models import model as M
+from ..optim.adamw import AdamWConfig, init_opt_state
+
+__all__ = ["input_specs", "params_struct", "opt_struct", "cache_struct",
+           "train_step_fn", "prefill_fn", "decode_fn", "opt_config_for"]
+
+
+def _sds(shape, dtype, mesh=None, spec=None):
+    sharding = NamedSharding(mesh, spec) if mesh is not None else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _tree_sds(shapes_tree, mesh, specs_tree, dtype):
+    def mk(shape, spec):
+        return _sds(tuple(shape), dtype, mesh, spec)
+    return jax.tree.map(
+        mk, shapes_tree, specs_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(i, (int, np.integer)) for i in x))
+
+
+def params_struct(cfg: ModelConfig, mesh: Mesh, dtype=jnp.bfloat16,
+                  fsdp: bool = False):
+    shapes = M.param_shapes(cfg)
+    specs = param_specs(shapes, mesh, fsdp=fsdp)
+    return _tree_sds(shapes, mesh, specs, dtype)
+
+
+def opt_config_for(cfg: ModelConfig) -> AdamWConfig:
+    """llama4-maverick (400B) needs int8 moments to fit a 256-chip pod;
+    everyone else runs f32 moments."""
+    if cfg.name.startswith("llama4"):
+        return AdamWConfig(quantized_state=True)
+    return AdamWConfig()
+
+
+def opt_struct(params_sds, opt_cfg: AdamWConfig, mesh: Mesh):
+    """eval_shape the optimizer init, then re-attach shardings: f32 moments
+    shard exactly like their parameter; int8-quantized blocks [Nb, 128]
+    shard the block dim over every mesh axis that divides it (they are
+    flat — parameter structure is irrelevant)."""
+    out = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), params_sds)
+
+    if not opt_cfg.quantized_state:
+        def attach(path_sds, like_sds):
+            return jax.ShapeDtypeStruct(path_sds.shape, path_sds.dtype,
+                                        sharding=like_sds.sharding)
+        m = jax.tree.map(attach, out["m"], params_sds)
+        v = jax.tree.map(attach, out["v"], params_sds)
+        return dict(m=m, v=v, step=out["step"])
+
+    all_axes = tuple(mesh.axis_names)
+
+    def attach_q(sds):
+        spec = sanitize_spec(tuple(sds.shape),
+                             P(all_axes, *([None] * (len(sds.shape) - 1))),
+                             mesh)
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    m = jax.tree.map(attach_q, out["m"])
+    v = jax.tree.map(attach_q, out["v"])
+    return dict(m=m, v=v, step=out["step"])
+
+
+def input_specs(arch: str, shape_name: str, mesh: Mesh):
+    """Model inputs for a cell: tokens/labels (+ frontend stubs)."""
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    bsp = batch_spec(mesh)
+    B = shape.global_batch
+
+    tok_shape = (B, 1) if shape.kind == "decode" else (B, shape.seq_len)
+    toks = _sds(tok_shape, jnp.int32, mesh,
+                sanitize_spec(tok_shape, bsp, mesh))
+    batch = dict(tokens=toks)
+    if shape.kind == "train":
+        batch["labels"] = toks
+
+    stub_shape = (B, cfg.n_frontend_tokens, cfg.d_model)
+    stub_spec = sanitize_spec(stub_shape, P(bsp[0], None, "model"), mesh)
+    if cfg.frontend == "vision_stub" and shape.kind != "decode":
+        batch["patches"] = _sds(stub_shape, jnp.bfloat16, mesh, stub_spec)
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = _sds(stub_shape, jnp.bfloat16, mesh, stub_spec)
+    return batch
+
+
+def cache_struct(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                 dtype=jnp.bfloat16, seq_shard_kv: bool | None = None):
+    """Decode-cache ShapeDtypeStructs (incl. whisper cross-KV)."""
+    if seq_shard_kv is None:
+        tp = mesh.devices.shape[-1]
+        seq_shard_kv = (cfg.n_kv_heads % tp) != 0
+    B = shape.global_batch
+    out = jax.eval_shape(
+        lambda: M.init_cache(cfg, B, max_len=shape.seq_len, dtype=dtype))
+    if cfg.n_encoder_layers:
+        Hkv, Dh, F = cfg.n_kv_heads, cfg.hd, cfg.n_frontend_tokens
+        kv = jax.ShapeDtypeStruct((B, F, Hkv, Dh), dtype)
+        out["cross_kv"] = [(kv, kv) for _ in range(cfg.n_layers)]
+    specs = cache_specs(mesh, out, seq_shard_kv=seq_shard_kv)
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        out, specs)
+
+
+# ---- step functions (what gets lowered) -----------------------------------
+def train_step_fn(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                  microbatches: int = 1, remat: str = "dots_saveable"):
+    from ..train.loop import TrainConfig, make_train_step
+    tc = TrainConfig(microbatches=microbatches, remat=remat)
+    return make_train_step(cfg, opt_cfg, tc)
+
+
+def prefill_fn(cfg: ModelConfig):
+    """Serving prefill: full forward, last-position logits only."""
+    def fn(params, batch):
+        logits = M.forward(params, batch, cfg)
+        return logits[:, -1:]
+    return fn
+
+
+def decode_fn(cfg: ModelConfig):
+    def fn(params, tokens, cache):
+        return M.decode_step(params, tokens, cfg, cache)
+    return fn

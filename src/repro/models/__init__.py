@@ -1,0 +1,5 @@
+from .model import (decode_step, forward, init_cache, init_params, loss_fn,
+                    param_count, param_shapes, prefill)
+
+__all__ = ["decode_step", "forward", "init_cache", "init_params", "loss_fn",
+           "param_count", "param_shapes", "prefill"]

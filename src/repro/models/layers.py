@@ -1,0 +1,233 @@
+"""Shared building blocks for the model zoo: norms, RoPE, MLPs, and
+memory-sane attention (blockwise-flash prefill in pure JAX + the Pallas
+decode kernel for serving)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import decode_attention
+
+NEG_INF = -2.0e38
+
+
+# ----------------------------------------------------------------- norms --
+def rms_norm(x, weight, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ------------------------------------------------------------------ RoPE --
+def rope_angles(positions, head_dim: int, theta: float = 10_000.0):
+    """positions [*, S] -> (cos, sin) [*, S, head_dim/2] (float32)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., S, H, D]; cos/sin [..., S, D/2] broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :] if x.ndim == cos.ndim + 1 else cos
+    s = sin[..., None, :] if x.ndim == sin.ndim + 1 else sin
+    # broadcast: x is [B,S,H,D]; cos [B,S,D/2] -> [B,S,1,D/2]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- MLP --
+def gated_mlp(x, w_gate, w_up, w_down, act: str = "silu"):
+    g = x @ w_gate
+    u = x @ w_up
+    if act == "silu":
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(g, approximate=True) * u
+    return h @ w_down
+
+
+# ------------------------------------------------------- flash attention --
+def _seq_constrain(t, seq_axes, sq_dim: int):
+    """Pin the Sq dim of a flash-attention carry to the tp axis (avoids
+    the SPMD 'involuntary full rematerialization' resharding)."""
+    if seq_axes is None:
+        return t
+    from jax.sharding import PartitionSpec as PS
+    dp, tp = seq_axes
+    spec = [None] * t.ndim
+    if dp:
+        spec[0] = tuple(dp) if len(dp) > 1 else dp[0]
+    spec[sq_dim] = tp
+    try:
+        return jax.lax.with_sharding_constraint(t, PS(*spec))
+    except Exception:
+        return t
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block",
+                                             "cap", "seq_axes"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, block: int = 1024,
+                    cap: Optional[float] = None, seq_axes=None):
+    """Blockwise-online-softmax attention in pure JAX (lax.scan over KV
+    blocks).  Never materialises the S x S score matrix — this is what
+    makes the 32k prefill shapes compile inside HBM.
+
+    q: [B, Sq, H, D]; k, v: [B, Skv, Hkv, D] (GQA: H = G * Hkv).
+    causal assumes q occupies the LAST Sq positions of the Skv timeline.
+    window: sliding-window size (attend to the last `window` positions).
+    """
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / (D ** 0.5)
+    q_off = Skv - Sq    # first q position in the kv timeline
+
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, G, D)
+    n_blocks = -(-Skv // block)
+    pad = n_blocks * block - Skv
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = kp.reshape(B, n_blocks, block, Hkv, D).astype(jnp.float32)
+    vb = vp.reshape(B, n_blocks, block, Hkv, D).astype(jnp.float32)
+
+    q_pos = q_off + jnp.arange(Sq)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, b_idx = blk
+        k_pos = b_idx * block + jnp.arange(block)
+        s = jnp.einsum("bshgd,bthd->bhgst", qf, kblk)   # [B,Hkv,G,Sq,block]
+        if cap is not None:
+            s = softcap(s, cap)
+        mask = k_pos[None, :] <= q_pos[:, None] if causal else \
+            jnp.ones((Sq, block), bool)
+        mask = mask & (k_pos[None, :] < Skv)
+        if window is not None:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = _seq_constrain(jnp.maximum(m, s.max(axis=-1)), seq_axes, 3)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = _seq_constrain(l * corr + p.sum(axis=-1), seq_axes, 3)
+        acc_new = _seq_constrain(
+            acc * corr[..., None] + jnp.einsum("bhgst,bthd->bhgsd", p, vblk),
+            seq_axes, 3)
+        return (m_new, l_new, acc_new), None
+
+    m0 = _seq_constrain(jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32),
+                        seq_axes, 3)
+    l0 = _seq_constrain(jnp.zeros((B, Hkv, G, Sq), jnp.float32),
+                        seq_axes, 3)
+    a0 = _seq_constrain(jnp.zeros((B, Hkv, G, Sq, D), jnp.float32),
+                        seq_axes, 3)
+    kb_t = jnp.moveaxis(kb, 1, 0)
+    vb_t = jnp.moveaxis(vb, 1, 0)
+    (m, l, acc), _ = lax.scan(
+        body, (m0, l0, a0), (kb_t, vb_t, jnp.arange(n_blocks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out.reshape(B, Hkv * G, Sq, D), 1, 2)  # [B,Sq,H,D]
+    return out.astype(q.dtype)
+
+
+def attention_block(x, params, cfg_layer, positions, cache=None):
+    """GQA attention block (pre-norm applied by the caller).
+
+    x: [B, S, D_model].  params: dict(wq, wk, wv, wo [+ q_norm/k_norm]).
+    cfg_layer: dict(n_heads, n_kv_heads, head_dim, window, cap, rope_theta,
+    causal).
+
+    cache=None (train / prefill): full blockwise-flash attention; returns
+      (out, (k, v)) with k/v [B, S, Hkv, Dh] post-RoPE so the serving
+      engine can stash them.
+    cache=dict(k, v [B,Hkv,C,Dh], len [B]) (decode, S == 1): ring-buffer
+      cache of size C (C = window for SWA layers); RoPE uses absolute
+      positions so ring order is irrelevant (softmax is permutation
+      invariant over KV).  Returns (out, updated cache).
+    """
+    B, S, _ = x.shape
+    H = cfg_layer["n_heads"]
+    Hkv = cfg_layer["n_kv_heads"]
+    Dh = cfg_layer["head_dim"]
+    window = cfg_layer.get("window")
+    cap = cfg_layer.get("cap")
+    theta = cfg_layer.get("rope_theta", 10_000.0)
+    causal = cfg_layer.get("causal", True)
+
+    q = (x @ params["wq"]).reshape(B, S, H, Dh)
+    k = (x @ params["wk"]).reshape(B, S, Hkv, Dh)
+    v = (x @ params["wv"]).reshape(B, S, Hkv, Dh)
+    if "q_norm" in params:     # gemma3-style qk-norm
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if theta is not None:
+        cos, sin = rope_angles(positions, Dh, theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    if cache is None:
+        if cfg_layer.get("seq_shard") and cfg_layer.get("tp_axis"):
+            # context-parallel attention core: shard the SEQUENCE over the
+            # tp axis (kv heads < tp size would otherwise pad heads and
+            # all-reduce the giant score tensors)
+            from jax.sharding import PartitionSpec as PS
+            dp = cfg_layer.get("dp_axes") or ()
+            dp_e = (tuple(dp) if len(dp) > 1 else dp[0]) if dp else None
+            tp = cfg_layer["tp_axis"]
+            try:
+                q = jax.lax.with_sharding_constraint(
+                    q, PS(dp_e, tp, None, None))
+                k = jax.lax.with_sharding_constraint(
+                    k, PS(dp_e, None, None, None))
+                v = jax.lax.with_sharding_constraint(
+                    v, PS(dp_e, None, None, None))
+            except Exception:
+                pass
+        seq_axes = None
+        if cfg_layer.get("seq_shard") and cfg_layer.get("tp_axis"):
+            seq_axes = (tuple(cfg_layer.get("dp_axes") or ()),
+                        cfg_layer["tp_axis"])
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              cap=cap, seq_axes=seq_axes)
+        out = out.reshape(B, S, H * Dh)
+        if cfg_layer.get("seq_shard") and cfg_layer.get("tp_axis"):
+            from jax.sharding import PartitionSpec as PS
+            dp = cfg_layer.get("dp_axes") or ()
+            dp_e = (tuple(dp) if len(dp) > 1 else dp[0]) if dp else None
+            try:
+                out = jax.lax.with_sharding_constraint(
+                    out, PS(dp_e, None, cfg_layer["tp_axis"]))
+            except Exception:
+                pass
+        return out @ params["wo"], (k, v)
+
+    assert S == 1, "decode path handles one token at a time"
+    ck, cv, clen = cache["k"], cache["v"], cache["len"]
+    C = ck.shape[2]
+    slot = clen % C                                   # ring position [B]
+    k_t = jnp.swapaxes(k, 1, 2)                       # [B, Hkv, 1, Dh]
+    v_t = jnp.swapaxes(v, 1, 2)
+    ck = jax.vmap(lambda c, u, i: lax.dynamic_update_slice(c, u, (0, i, 0))
+                  )(ck, k_t.astype(ck.dtype), slot)
+    cv = jax.vmap(lambda c, u, i: lax.dynamic_update_slice(c, u, (0, i, 0))
+                  )(cv, v_t.astype(cv.dtype), slot)
+    new_len = clen + 1
+    eff_len = jnp.minimum(new_len, C)
+    qg = q.reshape(B, Hkv, H // Hkv, Dh)
+    out = decode_attention(qg, ck, cv, eff_len, cap=cap)
+    out = out.reshape(B, S, H * Dh)
+    return out @ params["wo"], dict(k=ck, v=cv, len=new_len)

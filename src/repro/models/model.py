@@ -1,0 +1,550 @@
+"""Unified functional model covering all 10 assigned architectures.
+
+Pure-functional JAX (no flax): params are nested dicts, every entry point
+is jit/pjit-able.  Entry points:
+  init_params(rng, cfg, dtype)                -> params
+  forward(params, batch, cfg)                 -> logits   (small/smoke use)
+  forward_hidden(params, batch, cfg)          -> final hidden states
+  loss_fn(params, batch, cfg)                 -> scalar (seq-chunked CE)
+  init_cache(cfg, batch, max_len, dtype)      -> cache
+  prefill(params, batch, cfg, cache)          -> (last logits, cache)
+  decode_step(params, tokens, cfg, cache)     -> (logits, cache)
+
+Scale features:
+  - cfg.scan_layers: lax.scan over the repeating layer unit (compile time
+    and HLO size O(1) in depth; the scan unit is remat'ed with the
+    dots_saveable policy — the standard scan+checkpoint training combo);
+  - loss_fn/prefill never materialise [B, S, vocab] logits: the unembed
+    matmul + log-softmax run over sequence chunks (cfg.loss_chunk).
+
+batch dict: tokens [B, S] int32 (+ labels for train, + 'frames'/'patches'
+stub embeddings [B, F, D] for audio/vlm frontends).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..configs.base import ModelConfig
+from .layers import (attention_block, flash_attention, gated_mlp, rms_norm,
+                     softcap)
+from .moe import moe_layer, moe_param_shapes
+from .ssm import (mamba2_block, mamba2_decode_step, mamba2_init_state,
+                  mamba2_param_shapes)
+from .xlstm import (mlstm_block, mlstm_decode_step, mlstm_init_state,
+                    mlstm_param_shapes, slstm_block, slstm_decode_step,
+                    slstm_init_state, slstm_param_shapes)
+
+__all__ = ["init_params", "forward", "forward_hidden", "loss_fn",
+           "init_cache", "prefill", "decode_step", "param_count",
+           "param_shapes"]
+
+
+def _use_scan(cfg: ModelConfig) -> bool:
+    return cfg.scan_layers and not cfg.n_encoder_layers
+
+
+def _constrain(x, cfg: ModelConfig, *dims):
+    """Activation sharding constraint from launcher hints (no-op when no
+    mesh axes are configured, e.g. CPU smoke tests).  dims entries:
+    'dp' -> batch axes, 'tp' -> tensor axis, None -> replicated."""
+    if not cfg.dp_axes and not cfg.tp_axis:
+        return x
+    from jax.sharding import PartitionSpec as PS
+    spec = []
+    for d in dims:
+        if d == "dp" and cfg.dp_axes:
+            spec.append(tuple(cfg.dp_axes) if len(cfg.dp_axes) > 1
+                        else cfg.dp_axes[0])
+        elif d == "tp" and cfg.tp_axis:
+            spec.append(cfg.tp_axis)
+        else:
+            spec.append(None)
+    try:
+        return jax.lax.with_sharding_constraint(x, PS(*spec))
+    except Exception:
+        return x   # no ambient mesh
+
+
+# =========================================================== param shapes ==
+def _attn_shapes(cfg: ModelConfig) -> dict:
+    D, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    s = dict(wq=(D, H * Dh), wk=(D, Hkv * Dh), wv=(D, Hkv * Dh),
+             wo=(H * Dh, D))
+    if cfg.qk_norm:
+        s.update(q_norm=(Dh,), k_norm=(Dh,))
+    return s
+
+
+def _mlp_shapes(cfg: ModelConfig) -> dict:
+    return dict(w_gate=(cfg.d_model, cfg.d_ff), w_up=(cfg.d_model, cfg.d_ff),
+                w_down=(cfg.d_ff, cfg.d_model))
+
+
+def _layer_shapes(cfg: ModelConfig, spec: dict) -> dict:
+    D = cfg.d_model
+    ls: dict = dict(norm1=(D,))
+    if spec["kind"] == "attn":
+        ls["attn"] = _attn_shapes(cfg)
+        ls["norm2"] = (D,)
+        if spec["ffn"] == "moe":
+            ls["moe"] = moe_param_shapes(D, cfg.d_ff, cfg.n_experts,
+                                         cfg.shared_expert)
+        elif spec["ffn"] == "dense":
+            ls["mlp"] = _mlp_shapes(cfg)
+    elif spec["kind"] == "mamba":
+        ls["mamba"] = mamba2_param_shapes(D, cfg.n_ssm_heads,
+                                          cfg.ssm_head_dim, cfg.d_state)
+    elif spec["kind"] == "mlstm":
+        ls["mlstm"] = mlstm_param_shapes(D, cfg.n_heads, cfg.hd)
+    elif spec["kind"] == "slstm":
+        ls["slstm"] = slstm_param_shapes(D, cfg.n_heads, cfg.hd)
+    return ls
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    shapes: dict = dict(embed=(cfg.vocab, D), final_norm=(D,))
+    if not cfg.tie_embeddings:
+        shapes["unembed"] = (D, cfg.vocab)
+
+    specs = cfg.layer_kinds()
+    if _use_scan(cfg):
+        P, n_units, n_tail = cfg.scan_split()
+
+        def stack(tree):
+            return jax.tree.map(
+                lambda s: (n_units,) + tuple(s), tree,
+                is_leaf=lambda x: isinstance(x, tuple) and all(
+                    isinstance(i, (int, np.integer)) for i in x))
+
+        shapes["layers_stack"] = [stack(_layer_shapes(cfg, specs[j]))
+                                  for j in range(P)] if n_units else []
+        shapes["layers_tail"] = [_layer_shapes(cfg, s)
+                                 for s in specs[n_units * P:]]
+    else:
+        shapes["layers"] = [_layer_shapes(cfg, s) for s in specs]
+
+    if cfg.family == "hybrid" and cfg.attn_every:
+        shapes["shared_attn"] = dict(
+            norm1=(D,), attn=_attn_shapes(cfg), norm2=(D,),
+            mlp=_mlp_shapes(cfg))
+    if cfg.n_encoder_layers:
+        shapes["encoder"] = [
+            dict(norm1=(D,), attn=_attn_shapes(cfg), norm2=(D,),
+                 mlp=_mlp_shapes(cfg))
+            for _ in range(cfg.n_encoder_layers)]
+        shapes["cross"] = [dict(norm=(D,), attn=_attn_shapes(cfg))
+                           for _ in range(cfg.n_layers)]
+        shapes["enc_final_norm"] = (D,)
+    return shapes
+
+
+def init_params(rng, cfg: ModelConfig, dtype=jnp.float32):
+    shapes = param_shapes(cfg)
+    is_shape = lambda x: isinstance(x, tuple) and all(
+        isinstance(i, (int, np.integer)) for i in x)
+    leaves, treedef = jax.tree.flatten(shapes, is_leaf=is_shape)
+    keys = jax.random.split(rng, len(leaves))
+    embed_shape = shapes["embed"]
+
+    def make(key, shape):
+        if len(shape) == 1:
+            return jnp.zeros(shape, dtype)        # norm weights (1+w form)
+        fan_in = shape[-2]
+        scale = 0.02 if tuple(shape) == tuple(embed_shape) else fan_in ** -0.5
+        return jax.random.normal(key, shape, dtype) * scale
+
+    return jax.tree.unflatten(treedef, [make(k, s)
+                                        for k, s in zip(keys, leaves)])
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+def layer_params_at(params, cfg: ModelConfig, i: int):
+    """Per-layer param view regardless of stacked/flat layout."""
+    if not _use_scan(cfg):
+        return params["layers"][i]
+    P, n_units, _ = cfg.scan_split()
+    if i < n_units * P:
+        u, j = divmod(i, P)
+        return jax.tree.map(lambda x: x[u], params["layers_stack"][j])
+    return params["layers_tail"][i - n_units * P]
+
+
+# ================================================================ forward ==
+def _dense_ffn(x, lp, cfg):
+    return gated_mlp(x, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                     lp["mlp"]["w_down"], act="gelu")
+
+
+def _decoder_layer_full(x, lp, spec, cfg: ModelConfig, positions,
+                        enc_out=None, cross_p=None, shared_p=None):
+    """One decoder layer, full-sequence mode (train / prefill).
+    Returns (x, stash) where stash holds prefill KV / final states."""
+    stash = {}
+    kind = spec["kind"]
+    if kind == "attn":
+        h, kv = attention_block(rms_norm(x, lp["norm1"]), lp["attn"],
+                                cfg.attn_layer_cfg(window=spec["window"]),
+                                positions)
+        x = x + h
+        stash["kv"] = kv
+        if cross_p is not None:
+            hc, _ = _cross_attention(rms_norm(x, cross_p["norm"]),
+                                     cross_p["attn"], enc_out, cfg)
+            x = x + hc
+        h2 = rms_norm(x, lp["norm2"])
+        if spec["ffn"] == "moe":
+            x = x + moe_layer(h2, lp["moe"], top_k=cfg.top_k,
+                              capacity_factor=cfg.capacity_factor,
+                              shared_expert=cfg.shared_expert,
+                              layout=(cfg.dp_axes, cfg.tp_axis, cfg.moe_ep,
+                                      cfg.moe_groups))
+        else:
+            x = x + _dense_ffn(h2, lp, cfg)
+    elif kind == "mamba":
+        y, st = mamba2_block(rms_norm(x, lp["norm1"]), lp["mamba"],
+                             cfg.ssm_layer_cfg(), return_state=True)
+        x = x + y
+        stash["ssm"] = st
+        if spec.get("shared_attn") and shared_p is not None:
+            h, kv = attention_block(rms_norm(x, shared_p["norm1"]),
+                                    shared_p["attn"], cfg.attn_layer_cfg(),
+                                    positions)
+            x = x + h
+            x = x + gated_mlp(rms_norm(x, shared_p["norm2"]),
+                              shared_p["mlp"]["w_gate"],
+                              shared_p["mlp"]["w_up"],
+                              shared_p["mlp"]["w_down"])
+            stash["shared_kv"] = kv
+    elif kind == "mlstm":
+        y, st = mlstm_block(rms_norm(x, lp["norm1"]), lp["mlstm"],
+                            cfg.xlstm_layer_cfg(), return_state=True)
+        x = x + y
+        stash["mlstm"] = st
+    elif kind == "slstm":
+        y, st = slstm_block(rms_norm(x, lp["norm1"]), lp["slstm"],
+                            cfg.xlstm_layer_cfg(), return_state=True)
+        x = x + y
+        stash["slstm"] = st
+    return x, stash
+
+
+def _cross_attention(x, ap, enc_out, cfg: ModelConfig, cached_kv=None):
+    """Cross-attention to encoder output (whisper decoder)."""
+    B, S, _ = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ ap["wq"]).reshape(B, S, H, Dh)
+    if cached_kv is None:
+        F = enc_out.shape[1]
+        k = (enc_out @ ap["wk"]).reshape(B, F, Hkv, Dh)
+        v = (enc_out @ ap["wv"]).reshape(B, F, Hkv, Dh)
+    else:
+        k, v = cached_kv
+    out = flash_attention(q, k, v, causal=False, block=512)
+    out = out.reshape(B, S, H * Dh) @ ap["wo"]
+    return out, (k, v)
+
+
+def _run_encoder(params, frames, cfg: ModelConfig):
+    x = frames
+    pos = jnp.arange(x.shape[1])[None]
+    for lp in params["encoder"]:
+        h, _ = attention_block(rms_norm(x, lp["norm1"]), lp["attn"],
+                               cfg.attn_layer_cfg(causal=False), pos)
+        x = x + h
+        x = x + gated_mlp(rms_norm(x, lp["norm2"]), lp["mlp"]["w_gate"],
+                          lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+    return rms_norm(x, params["enc_final_norm"])
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    """Token embedding + frontend-stub concatenation (vlm)."""
+    x = params["embed"][batch["tokens"]] * (cfg.d_model ** 0.5)
+    n_front = 0
+    if cfg.frontend == "vision_stub" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+        n_front = batch["patches"].shape[1]
+    return x, n_front
+
+
+def forward_hidden(params, batch, cfg: ModelConfig,
+                   collect_stash: bool = False):
+    """Embeddings -> all decoder layers -> final norm.
+    Returns (hidden [B, S_total, D], stashes | None, n_front)."""
+    x, n_front = _embed_inputs(params, batch, cfg)
+    x = _constrain(x, cfg, "dp", None, None)
+    positions = jnp.arange(x.shape[1])[None]
+    enc_out = None
+    if cfg.n_encoder_layers:
+        enc_out = _run_encoder(params, batch["frames"], cfg)
+    shared_p = params.get("shared_attn")
+    specs = cfg.layer_kinds()
+
+    stashes = None
+    if _use_scan(cfg):
+        P, n_units, _ = cfg.scan_split()
+        unit_specs = specs[:P]
+
+        def unit(x, unit_params):
+            stash_u = []
+            for j, sp in enumerate(unit_specs):
+                x, st = _decoder_layer_full(x, unit_params[j], sp, cfg,
+                                            positions, shared_p=shared_p)
+                stash_u.append(st)
+            return x, tuple(stash_u)
+
+        unit_ck = jax.checkpoint(
+            unit, policy=jax.checkpoint_policies.dots_saveable)
+        if n_units:
+            x, stacked = lax.scan(unit_ck, x, params["layers_stack"])
+        else:
+            stacked = None
+        tail_stash = []
+        for j, lp in enumerate(params["layers_tail"]):
+            x, st = _decoder_layer_full(x, lp, specs[n_units * P + j], cfg,
+                                        positions, shared_p=shared_p)
+            tail_stash.append(st)
+        if collect_stash:
+            stashes = []
+            for i in range(cfg.n_layers):
+                if i < n_units * P:
+                    u, j = divmod(i, P)
+                    stashes.append(jax.tree.map(lambda s: s[u], stacked[j]))
+                else:
+                    stashes.append(tail_stash[i - n_units * P])
+    else:
+        stashes = []
+        for i, (lp, spec) in enumerate(zip(params["layers"], specs)):
+            cross_p = params["cross"][i] if cfg.n_encoder_layers else None
+            x, stash = _decoder_layer_full(x, lp, spec, cfg, positions,
+                                           enc_out=enc_out, cross_p=cross_p,
+                                           shared_p=shared_p)
+            stashes.append(stash)
+
+    x = rms_norm(x, params["final_norm"])
+    return x, (stashes if collect_stash else None), n_front
+
+
+def _unembed_matrix(params, cfg: ModelConfig):
+    return (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Full logits [B, S_total, vocab] — smoke/test path (materialises
+    the logits; production paths use loss_fn / prefill instead)."""
+    x, _, _ = forward_hidden(params, batch, cfg)
+    logits = x @ _unembed_matrix(params, cfg).astype(x.dtype)
+    return softcap(logits, cfg.final_softcap)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """Next-token CE with sequence-chunked unembed+logsoftmax: peak extra
+    memory is [B, chunk, vocab] bf16 instead of [B, S, vocab] f32."""
+    x, _, n_front = forward_hidden(params, batch, cfg)
+    x = x[:, n_front:]
+    labels = batch.get("labels", batch["tokens"])
+    xs = x[:, :-1]
+    tgt = labels[:, 1:]
+    B, Sm1, D = xs.shape
+    unembed = _unembed_matrix(params, cfg)
+
+    chunk = min(cfg.loss_chunk, Sm1)
+    n_chunks = Sm1 // chunk
+    rem = Sm1 - n_chunks * chunk
+
+    def chunk_nll(xc, tc):
+        logits = xc @ unembed.astype(xc.dtype)
+        logits = _constrain(logits, cfg, "dp", None, "tp")
+        logits = softcap(logits, cfg.final_softcap).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, tc[..., None], -1)[..., 0]
+        return (lse - picked).sum()
+
+    total = jnp.float32(0.0)
+    if n_chunks:
+        xm = xs[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, D)
+        tm = tgt[:, : n_chunks * chunk].reshape(B, n_chunks, chunk)
+
+        def body(acc, xt):
+            xc, tc = xt
+            return acc + chunk_nll(xc, tc), None
+
+        total, _ = lax.scan(body, total,
+                            (jnp.moveaxis(xm, 1, 0), jnp.moveaxis(tm, 1, 0)))
+    if rem:
+        total = total + chunk_nll(xs[:, n_chunks * chunk:],
+                                  tgt[:, n_chunks * chunk:])
+    return total / (B * Sm1)
+
+
+# ================================================================ serving ==
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """Per-layer decode caches.  Attention layers get ring buffers sized
+    min(window, max_len); SSM/xLSTM layers carry recurrent state."""
+    B = batch_size
+    Hkv, Dh = cfg.n_kv_heads, cfg.hd
+    cache: dict = dict(layers=[], len=jnp.zeros((B,), jnp.int32))
+
+    def kv(sz):
+        return dict(k=jnp.zeros((B, Hkv, sz, Dh), dtype),
+                    v=jnp.zeros((B, Hkv, sz, Dh), dtype),
+                    len=jnp.zeros((B,), jnp.int32))
+
+    for spec in cfg.layer_kinds():
+        if spec["kind"] == "attn":
+            sz = min(spec["window"] or max_len, max_len)
+            c = dict(kv=kv(sz))
+        elif spec["kind"] == "mamba":
+            c = dict(ssm=mamba2_init_state(B, cfg.ssm_layer_cfg()))
+            if spec.get("shared_attn"):
+                c["shared_kv"] = kv(max_len)
+        elif spec["kind"] == "mlstm":
+            c = dict(mlstm=mlstm_init_state(B, cfg.xlstm_layer_cfg()))
+        else:
+            c = dict(slstm=slstm_init_state(B, cfg.xlstm_layer_cfg()))
+        cache["layers"].append(c)
+    if cfg.n_encoder_layers:
+        cache["cross_kv"] = None     # filled by prefill
+    return cache
+
+
+def decode_step(params, tokens, cfg: ModelConfig, cache):
+    """tokens [B, 1] -> (logits [B, 1, vocab], cache)."""
+    B = tokens.shape[0]
+    x = params["embed"][tokens] * (cfg.d_model ** 0.5)
+    positions = cache["len"][:, None]
+
+    new_layers = []
+    for i, (spec, lc) in enumerate(zip(cfg.layer_kinds(), cache["layers"])):
+        lp = layer_params_at(params, cfg, i)
+        nc = dict(lc)
+        if spec["kind"] == "attn":
+            h, nkv = attention_block(
+                rms_norm(x, lp["norm1"]), lp["attn"],
+                cfg.attn_layer_cfg(window=spec["window"]), positions,
+                cache=lc["kv"])
+            x = x + h
+            nc["kv"] = nkv
+            if cfg.n_encoder_layers:
+                cp = params["cross"][i]
+                hc, _ = _cross_attention(rms_norm(x, cp["norm"]), cp["attn"],
+                                         None, cfg,
+                                         cached_kv=cache["cross_kv"][i])
+                x = x + hc
+            h2 = rms_norm(x, lp["norm2"])
+            if spec["ffn"] == "moe":
+                x = x + moe_layer(h2, lp["moe"], top_k=cfg.top_k,
+                                  capacity_factor=cfg.capacity_factor,
+                                  shared_expert=cfg.shared_expert,
+                                  layout=(cfg.dp_axes, cfg.tp_axis,
+                                          cfg.moe_ep, cfg.moe_groups))
+            else:
+                x = x + _dense_ffn(h2, lp, cfg)
+        elif spec["kind"] == "mamba":
+            y, st = mamba2_decode_step(rms_norm(x, lp["norm1"]), lp["mamba"],
+                                       cfg.ssm_layer_cfg(), lc["ssm"])
+            x = x + y
+            nc["ssm"] = st
+            if spec.get("shared_attn"):
+                sp = params["shared_attn"]
+                h, nkv = attention_block(rms_norm(x, sp["norm1"]), sp["attn"],
+                                         cfg.attn_layer_cfg(), positions,
+                                         cache=lc["shared_kv"])
+                x = x + h
+                x = x + gated_mlp(rms_norm(x, sp["norm2"]),
+                                  sp["mlp"]["w_gate"], sp["mlp"]["w_up"],
+                                  sp["mlp"]["w_down"])
+                nc["shared_kv"] = nkv
+        elif spec["kind"] == "mlstm":
+            y, st = mlstm_decode_step(rms_norm(x, lp["norm1"]), lp["mlstm"],
+                                      cfg.xlstm_layer_cfg(), lc["mlstm"])
+            x = x + y
+            nc["mlstm"] = st
+        else:
+            y, st = slstm_decode_step(rms_norm(x, lp["norm1"]), lp["slstm"],
+                                      cfg.xlstm_layer_cfg(), lc["slstm"])
+            x = x + y
+            nc["slstm"] = st
+        new_layers.append(nc)
+
+    x = rms_norm(x, params["final_norm"])
+    logits = softcap(x @ _unembed_matrix(params, cfg).astype(x.dtype),
+                     cfg.final_softcap)
+    new_cache = dict(cache, layers=new_layers, len=cache["len"] + 1)
+    return logits, new_cache
+
+
+def prefill(params, batch, cfg: ModelConfig, cache):
+    """Run the prompt through the full forward, stash KV/states into the
+    decode cache.  Returns (last-position logits, cache)."""
+    x, stashes, n_front = forward_hidden(params, batch, cfg,
+                                         collect_stash=True)
+    S = batch["tokens"].shape[1] + n_front
+    B = batch["tokens"].shape[0]
+    last = x[:, -1:]
+    logits = softcap(last @ _unembed_matrix(params, cfg).astype(x.dtype),
+                     cfg.final_softcap)
+
+    new_layers = []
+    for spec, lc, stash in zip(cfg.layer_kinds(), cache["layers"], stashes):
+        nc = dict(lc)
+        if spec["kind"] == "attn":
+            nc["kv"] = _stash_kv(lc["kv"], stash["kv"], S)
+        elif spec["kind"] == "mamba":
+            nc["ssm"] = stash["ssm"]
+            if spec.get("shared_attn"):
+                nc["shared_kv"] = _stash_kv(lc["shared_kv"],
+                                            stash["shared_kv"], S)
+        elif spec["kind"] == "mlstm":
+            nc["mlstm"] = stash["mlstm"]
+        else:
+            nc["slstm"] = stash["slstm"]
+        new_layers.append(nc)
+
+    new_cache = dict(cache, layers=new_layers,
+                     len=jnp.full((B,), S, jnp.int32))
+    if cfg.n_encoder_layers:
+        enc_out = _run_encoder(params, batch["frames"], cfg)
+        ckv = []
+        for cp in params["cross"]:
+            F = enc_out.shape[1]
+            k = (enc_out @ cp["attn"]["wk"]).reshape(B, F, cfg.n_kv_heads,
+                                                     cfg.hd)
+            v = (enc_out @ cp["attn"]["wv"]).reshape(B, F, cfg.n_kv_heads,
+                                                     cfg.hd)
+            ckv.append((k, v))
+        new_cache["cross_kv"] = ckv
+    return logits, new_cache
+
+
+def _stash_kv(kv_cache, kv_new, S):
+    """Write the last min(S, C) prefill keys/values into the ring cache."""
+    k, v = kv_new                          # [B, S, Hkv, Dh]
+    C = kv_cache["k"].shape[2]
+    B = k.shape[0]
+    k_t = jnp.swapaxes(k, 1, 2).astype(kv_cache["k"].dtype)
+    v_t = jnp.swapaxes(v, 1, 2).astype(kv_cache["v"].dtype)
+    if S <= C:
+        ck = jax.lax.dynamic_update_slice(
+            kv_cache["k"], k_t, (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            kv_cache["v"], v_t, (0, 0, 0, 0))
+    else:
+        # keep the last C positions; ring invariant: slot = pos % C
+        last_k = k_t[:, :, S - C:]
+        last_v = v_t[:, :, S - C:]
+        roll = (S - C) % C
+        ck = jnp.roll(last_k, shift=roll, axis=2)
+        cv = jnp.roll(last_v, shift=roll, axis=2)
+    return dict(k=ck, v=cv, len=jnp.full((B,), S, jnp.int32))

@@ -1,0 +1,140 @@
+"""Mixture-of-Experts layer with scatter-based token dispatch.
+
+Capacity-bounded top-k routing (Switch/GShard semantics) implemented with
+one-hot-cumsum position assignment + scatter into per-expert buffers, then
+batched expert matmuls.
+
+Two distributed layouts (chosen by the launcher via `layout`):
+  - expert-parallel (EP): n_experts divides the tp axis — the buffer's
+    expert dim is tp-sharded; GSPMD emits the canonical MoE all-to-all
+    at the scatter/gather boundaries (llama4-maverick: 128e / 16).
+  - group-local: n_experts < tp size (mixtral: 8e / 16) — tokens are
+    dispatched LOCALLY within each data shard (G groups = dp size, each
+    with its own capacity), expert weights replicate over data (FSDP)
+    and shard d_ff over tp.  No cross-device dispatch at all; the only
+    collectives are the FSDP weight gathers and the TP partial-sum
+    all-reduce — this removed a ~500 GB/device dense scatter all-reduce
+    in the mixtral train cell (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["moe_layer", "moe_param_shapes"]
+
+
+def moe_param_shapes(d_model: int, d_ff: int, n_experts: int,
+                     shared_expert: bool):
+    shapes = dict(
+        router=(d_model, n_experts),
+        w_gate=(n_experts, d_model, d_ff),
+        w_up=(n_experts, d_model, d_ff),
+        w_down=(n_experts, d_ff, d_model),
+    )
+    if shared_expert:
+        shapes.update(sh_gate=(d_model, d_ff), sh_up=(d_model, d_ff),
+                      sh_down=(d_ff, d_model))
+    return shapes
+
+
+def _constrain(t, spec_entries):
+    from jax.sharding import PartitionSpec as PS
+    try:
+        return jax.lax.with_sharding_constraint(t, PS(*spec_entries))
+    except Exception:
+        return t
+
+
+def moe_layer(x, params, *, top_k: int, capacity_factor: float = 1.25,
+              shared_expert: bool = False, layout=None):
+    """x: [B, S, D] -> [B, S, D].
+
+    Dropped tokens (over capacity) pass through with zero expert output —
+    the residual stream carries them (standard Switch behaviour).
+
+    layout: None (no constraints) or (dp_axes, tp_axis, ep, groups).
+    """
+    B, S, D = x.shape
+    E = params["router"].shape[1]
+    T = B * S
+
+    dp_axes, tp, ep, groups = (None, None, None, 1)
+    if layout is not None:
+        dp_axes, tp, ep, groups = layout
+        groups = max(1, groups or 1)
+        if T % groups != 0:
+            groups = 1
+    dp_e = None
+    if dp_axes:
+        dp_e = tuple(dp_axes) if len(dp_axes) > 1 else dp_axes[0]
+
+    G = groups
+    Tg = T // G
+    xt = x.reshape(G, Tg, D)
+
+    logits = (xt.astype(jnp.float32)
+              @ params["router"].astype(jnp.float32))          # [G, Tg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)        # [G, Tg, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = int(max(1, -(-Tg * top_k // E) * capacity_factor))
+
+    flat_e = expert_idx.reshape(G, Tg * top_k)                 # [G, Tg*k]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)        # [G, Tg*k, E]
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    pos_in_e = jnp.take_along_axis(pos, flat_e[..., None], 2)[..., 0]
+    keep = pos_in_e < C
+
+    # scatter tokens into [G, E, C, D] buffers (overflow dropped via OOB)
+    src = jnp.repeat(xt, top_k, axis=1)                        # [G, Tg*k, D]
+    e_idx = jnp.where(keep, flat_e, E)
+    g_idx = jnp.arange(G)[:, None] * jnp.ones_like(e_idx)
+    buf = jnp.zeros((G, E + 1, C, D), dtype=x.dtype)
+    buf = buf.at[g_idx, e_idx, jnp.minimum(pos_in_e, C - 1)].add(
+        src, mode="drop")
+    buf = buf[:, :E]
+
+    if layout is not None and ep is not None and tp:
+        if ep:
+            # EP: experts over tp, capacity slots over dp (G == 1)
+            buf = _constrain(buf, (None, tp, dp_e, None))
+        else:
+            # group-local: groups ride the dp axes, dispatch stays local
+            buf = _constrain(buf, (dp_e, None, None, None))
+
+    # batched expert FFN: [G,E,C,D] x [E,D,F]
+    wg = params["w_gate"].astype(x.dtype)
+    wu = params["w_up"].astype(x.dtype)
+    wd = params["w_down"].astype(x.dtype)
+    h = jnp.einsum("gecd,edf->gecf", buf, wg)
+    u = jnp.einsum("gecd,edf->gecf", buf, wu)
+    if layout is not None and ep is not None and tp:
+        hspec = ((None, tp, dp_e, None) if ep
+                 else (dp_e, None, None, tp))     # TP on d_ff when local
+        h = _constrain(h, hspec)
+        u = _constrain(u, hspec)
+    h = jax.nn.silu(h) * u
+    y_buf = jnp.einsum("gecf,efd->gecd", h, wd)
+    if layout is not None and ep is not None and tp:
+        y_buf = _constrain(y_buf, (None, tp, dp_e, None) if ep
+                           else (dp_e, None, None, None))
+
+    # gather back and combine with gates (token-local in both layouts)
+    gathered = y_buf[g_idx, jnp.minimum(flat_e, E - 1),
+                     jnp.minimum(pos_in_e, C - 1)]             # [G, Tg*k, D]
+    gathered = jnp.where(keep[..., None], gathered, 0.0)
+    weighted = gathered * gate_vals.reshape(G, -1)[..., None].astype(x.dtype)
+    y = weighted.reshape(G, Tg, top_k, D).sum(axis=2)
+
+    if shared_expert:
+        sh = (jax.nn.silu(xt @ params["sh_gate"]) * (xt @ params["sh_up"])
+              ) @ params["sh_down"]
+        y = y + sh
+
+    return y.reshape(B, S, D)

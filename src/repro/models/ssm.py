@@ -1,0 +1,167 @@
+"""Mamba2-style selective state-space (SSD) block — the zamba2 backbone.
+
+Chunked linear-recurrence formulation (Dao & Gu 2024, simplified):
+  h_t = exp(A * dt_t) h_{t-1} + dt_t * B_t x_t        (per head, d_state N)
+  y_t = C_t^T h_t + D x_t
+Scalar A per head (Mamba2's SSD restriction).  Prefill/train processes the
+sequence in chunks: intra-chunk via cumulative-decay attention-like masks,
+inter-chunk via a scan over [B, H, dh, N] states.  Decode is the one-step
+recurrence against a cached state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["mamba2_scan", "mamba2_block", "mamba2_param_shapes",
+           "mamba2_decode_step", "mamba2_init_state"]
+
+
+def mamba2_param_shapes(d_model: int, n_heads: int, d_head: int,
+                        d_state: int, expand: int = 2):
+    d_inner = n_heads * d_head
+    return dict(
+        in_proj=(d_model, 2 * d_inner + 2 * d_state * n_heads + n_heads),
+        a_log=(n_heads,),
+        d_skip=(n_heads,),
+        norm=(d_inner,),
+        out_proj=(d_inner, d_model),
+    )
+
+
+def _split_proj(z, n_heads, d_head, d_state):
+    d_inner = n_heads * d_head
+    xz, rest = z[..., : 2 * d_inner], z[..., 2 * d_inner:]
+    x_in, gate = xz[..., :d_inner], xz[..., d_inner:]
+    bc, dt = rest[..., : 2 * d_state * n_heads], rest[..., 2 * d_state * n_heads:]
+    b, c = jnp.split(bc, 2, axis=-1)
+    return x_in, gate, b, c, dt
+
+
+def mamba2_scan(x_in, b, c, dt, a_log, d_skip, *, chunk: int = 128,
+                init_state=None, return_state: bool = False):
+    """Chunked SSD scan.
+
+    x_in: [B, S, H, P] (P = d_head); b, c: [B, S, H, N]; dt: [B, S, H].
+    Returns y [B, S, H, P] (and final state [B, H, P, N] if requested).
+    """
+    B, S, H, P = x_in.shape
+    N = b.shape[-1]
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        x_in = jnp.pad(x_in, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # dt -> -1e4 so softplus(dt) == 0: padded steps neither decay the
+        # state (la = 0) nor inject into it (dt * x = 0) — the final state
+        # equals the state at position S exactly.
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)), constant_values=-1e4)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32))               # [B, S', H]
+    a = -jnp.exp(a_log.astype(jnp.float32))                    # [H] (neg)
+    la = dt * a[None, None, :]                                 # log decay
+    xb = (x_in.astype(jnp.float32)
+          * dt[..., None])                                     # dt * x
+
+    # reshape into chunks: [B, nc, L, H, ...]
+    L = chunk
+    xc = xb.reshape(B, n_chunks, L, H, P)
+    bc_ = b.reshape(B, n_chunks, L, H, N).astype(jnp.float32)
+    cc = c.reshape(B, n_chunks, L, H, N).astype(jnp.float32)
+    lac = la.reshape(B, n_chunks, L, H)
+
+    cum = jnp.cumsum(lac, axis=2)                              # [B,nc,L,H]
+    total = cum[:, :, -1]                                      # [B,nc,H]
+
+    # ---- intra-chunk (causal "attention" with decay weights)
+    # w[t, s] = exp(cum_t - cum_s) for s <= t.  The mask is applied to the
+    # EXPONENT (not the result) so the masked entries cannot overflow and
+    # poison the gradient (where-of-exp NaN trap).
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # [B,nc,L,L,H]
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    diff = jnp.where(causal[None, None, :, :, None], diff, -1e30)
+    w = jnp.exp(diff)
+    scores = jnp.einsum("bklhn,bkshn->bklsh", cc, bc_)         # C_t . B_s
+    y_intra = jnp.einsum("bklsh,bklsh,bkshp->bklhp",
+                         scores, w, xc)
+
+    # ---- inter-chunk: state carried across chunks
+    # chunk-local state contribution: sum_s exp(cum_last - cum_s) B_s x_s
+    decay_to_end = jnp.exp(total[:, :, None] - cum)            # [B,nc,L,H]
+    state_add = jnp.einsum("bklh,bklhn,bklhp->bkhpn",
+                           decay_to_end, bc_, xc)              # [B,nc,H,P,N]
+
+    def scan_fn(h_prev, inp):
+        tot, add = inp                                         # [B,H], [B,H,P,N]
+        h_new = h_prev * jnp.exp(tot)[..., None, None] + add
+        return h_new, h_prev                                   # emit PRE state
+
+    h0 = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    tot_t = jnp.moveaxis(total, 1, 0)                          # [nc,B,H]
+    add_t = jnp.moveaxis(state_add, 1, 0)
+    h_final, h_pre = lax.scan(scan_fn, h0, (tot_t, add_t))
+    h_pre = jnp.moveaxis(h_pre, 0, 1)                          # [B,nc,H,P,N]
+
+    # contribution of the carried state to each position
+    decay_from_start = jnp.exp(cum)                            # [B,nc,L,H]
+    y_inter = jnp.einsum("bklhn,bkhpn,bklh->bklhp",
+                         cc, h_pre, decay_from_start)
+
+    y = (y_intra + y_inter).reshape(B, n_chunks * L, H, P)[:, :S]
+    y = y + x_in.reshape(B, n_chunks * L, H, P)[:, :S] \
+        * d_skip.astype(jnp.float32)[None, None, :, None]
+    if return_state:
+        return y, h_final
+    return y
+
+
+def mamba2_block(x, params, cfg, init_state=None, return_state=False):
+    """x: [B, S, D_model] -> [B, S, D_model] (+ final SSD state)."""
+    H, P, N = cfg["n_ssm_heads"], cfg["ssm_head_dim"], cfg["d_state"]
+    z = x @ params["in_proj"]
+    x_in, gate, b, c, dt = _split_proj(z, H, P, N)
+    B_, S, _ = x.shape
+    x_in = x_in.reshape(B_, S, H, P)
+    b = b.reshape(B_, S, H, N)
+    c = c.reshape(B_, S, H, N)
+    out = mamba2_scan(x_in, b, c, dt, params["a_log"], params["d_skip"],
+                      init_state=init_state, return_state=return_state)
+    y, h_final = out if return_state else (out, None)
+    y = y.reshape(B_, S, H * P).astype(x.dtype)
+    y = y * jax.nn.silu(gate)
+    from .layers import rms_norm
+    y = rms_norm(y, params["norm"])
+    y = y @ params["out_proj"]
+    return (y, h_final) if return_state else y
+
+
+def mamba2_init_state(batch, cfg, dtype=jnp.float32):
+    return jnp.zeros((batch, cfg["n_ssm_heads"], cfg["ssm_head_dim"],
+                      cfg["d_state"]), dtype)
+
+
+def mamba2_decode_step(x, params, cfg, state):
+    """One-token recurrence.  x: [B, 1, D]; state [B, H, P, N]."""
+    H, P, N = cfg["n_ssm_heads"], cfg["ssm_head_dim"], cfg["d_state"]
+    z = x @ params["in_proj"]
+    x_in, gate, b, c, dt = _split_proj(z, H, P, N)
+    B_ = x.shape[0]
+    x_in = x_in.reshape(B_, H, P).astype(jnp.float32)
+    b = b.reshape(B_, H, N).astype(jnp.float32)
+    c = c.reshape(B_, H, N).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.reshape(B_, H).astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a[None])                              # [B, H]
+    state = (state * decay[..., None, None]
+             + jnp.einsum("bhp,bhn,bh->bhpn", x_in, b, dt))
+    y = jnp.einsum("bhn,bhpn->bhp", c, state)
+    y = y + x_in * params["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B_, 1, H * P).astype(x.dtype)
+    y = y * jax.nn.silu(gate.reshape(B_, 1, -1))
+    from .layers import rms_norm
+    y = rms_norm(y, params["norm"])
+    return y @ params["out_proj"], state

@@ -1,0 +1,225 @@
+"""xLSTM blocks (Beck et al. 2024): mLSTM (matrix memory, parallelisable)
+and sLSTM (scalar memory, strictly recurrent), for xlstm-1.3b.
+
+mLSTM chunked form (mirrors the SSD trick): exponential input gate i,
+sigmoid forget gate f, per-head matrix memory C [P, P] and normaliser
+n [P]:
+    C_t = f_t C_{t-1} + i_t v_t k_t^T
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = o_t * (q_t C_t) / max(|q_t . n_t|, 1)
+Intra-chunk pairs are evaluated with cumulative-log-gate weights; the
+inter-chunk state is carried by a lax.scan — O(S * chunk) memory.
+
+sLSTM: lax.scan over time (no parallel form exists — the recurrent gate
+matrices R forbid it; this is the paper's own trade-off).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["mlstm_block", "mlstm_param_shapes", "mlstm_init_state",
+           "mlstm_decode_step", "slstm_block", "slstm_param_shapes",
+           "slstm_init_state", "slstm_decode_step"]
+
+_EXP_CLIP = 30.0
+
+
+def mlstm_param_shapes(d_model: int, n_heads: int, d_head: int):
+    d_inner = n_heads * d_head
+    return dict(
+        wq=(d_model, d_inner), wk=(d_model, d_inner), wv=(d_model, d_inner),
+        w_if=(d_model, 2 * n_heads),          # input & forget gate projections
+        w_o=(d_model, d_inner),               # output gate
+        norm=(d_inner,),
+        out_proj=(d_inner, d_model),
+    )
+
+
+def _gates(x, w_if, n_heads):
+    g = x @ w_if                                            # [B,S,2H]
+    li = g[..., :n_heads].astype(jnp.float32)               # log input gate
+    lf = jax.nn.log_sigmoid(g[..., n_heads:].astype(jnp.float32))
+    return li, lf
+
+
+def mlstm_block(x, params, cfg, init_state=None, return_state=False,
+                chunk: int = 128):
+    """x: [B, S, D] -> [B, S, D].  State: (C [B,H,P,P], n [B,H,P])."""
+    H, P = cfg["n_heads"], cfg["head_dim"]
+    B, S, _ = x.shape
+    scale = 1.0 / (P ** 0.5)
+    q = (x @ params["wq"]).reshape(B, S, H, P).astype(jnp.float32) * scale
+    k = (x @ params["wk"]).reshape(B, S, H, P).astype(jnp.float32)
+    v = (x @ params["wv"]).reshape(B, S, H, P).astype(jnp.float32)
+    li, lf = _gates(x, params["w_if"], H)                   # [B,S,H]
+
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for t in (q, k, v))
+        # padded steps must be state no-ops: input gate exp(-1e30) = 0
+        # (no injection), forget gate log f = 0 => f = 1 (no decay).
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)), constant_values=0.0)
+    L = chunk
+    qc = q.reshape(B, n_chunks, L, H, P)
+    kc = k.reshape(B, n_chunks, L, H, P)
+    vc = v.reshape(B, n_chunks, L, H, P)
+    lic = li.reshape(B, n_chunks, L, H)
+    lfc = lf.reshape(B, n_chunks, L, H)
+
+    cum = jnp.cumsum(lfc, axis=2)                           # [B,nc,L,H]
+    total = cum[:, :, -1]
+
+    # intra-chunk weights w[t,s] = exp(cum_t - cum_s + li_s), s <= t
+    expo = (cum[:, :, :, None, :] - cum[:, :, None, :, :]
+            + lic[:, :, None, :, :])
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    expo = jnp.where(causal[None, None, :, :, None],
+                     jnp.minimum(expo, _EXP_CLIP), -1e30)
+    w = jnp.exp(expo)
+    scores = jnp.einsum("bklhp,bkshp->bklsh", qc, kc)
+    ws = w * scores
+    num_intra = jnp.einsum("bklsh,bkshp->bklhp", ws, vc)
+    den_intra = ws.sum(axis=3)                              # [B,nc,L,H]
+
+    # inter-chunk state scan
+    decay_to_end = jnp.exp(jnp.minimum(total[:, :, None] - cum + lic,
+                                       _EXP_CLIP))          # [B,nc,L,H]
+    C_add = jnp.einsum("bklh,bklhp,bklhq->bkhpq", decay_to_end, vc, kc)
+    n_add = jnp.einsum("bklh,bklhp->bkhp", decay_to_end, kc)
+
+    def scan_fn(carry, inp):
+        Cp, np_ = carry
+        tot, ca, na = inp
+        d = jnp.exp(tot)[..., None, None]
+        return (Cp * d + ca, np_ * jnp.exp(tot)[..., None] + na), (Cp, np_)
+
+    C0 = (jnp.zeros((B, H, P, P), jnp.float32) if init_state is None
+          else init_state[0].astype(jnp.float32))
+    n0 = (jnp.zeros((B, H, P), jnp.float32) if init_state is None
+          else init_state[1].astype(jnp.float32))
+    (Cf, nf), (C_pre, n_pre) = lax.scan(
+        scan_fn, (C0, n0),
+        (jnp.moveaxis(total, 1, 0), jnp.moveaxis(C_add, 1, 0),
+         jnp.moveaxis(n_add, 1, 0)))
+    C_pre = jnp.moveaxis(C_pre, 0, 1)                       # [B,nc,H,P,P]
+    n_pre = jnp.moveaxis(n_pre, 0, 1)
+
+    carry_w = jnp.exp(jnp.minimum(cum, _EXP_CLIP))          # [B,nc,L,H]
+    num_inter = jnp.einsum("bklh,bklhq,bkhpq->bklhp", carry_w, qc, C_pre)
+    den_inter = jnp.einsum("bklh,bklhp,bkhp->bklh", carry_w, qc, n_pre)
+
+    num = num_intra + num_inter
+    den = den_intra + den_inter
+    h = num / jnp.maximum(jnp.abs(den)[..., None], 1.0)
+    h = h.reshape(B, n_chunks * L, H * P)[:, :S].astype(x.dtype)
+
+    o = jax.nn.sigmoid(x @ params["w_o"])
+    h = h * o
+    from .layers import rms_norm
+    h = rms_norm(h, params["norm"])
+    y = h @ params["out_proj"]
+    if return_state:
+        return y, (Cf, nf)
+    return y
+
+
+def mlstm_init_state(batch, cfg, dtype=jnp.float32):
+    H, P = cfg["n_heads"], cfg["head_dim"]
+    return (jnp.zeros((batch, H, P, P), dtype),
+            jnp.zeros((batch, H, P), dtype))
+
+
+def mlstm_decode_step(x, params, cfg, state):
+    """x: [B, 1, D]; state (C, n)."""
+    H, P = cfg["n_heads"], cfg["head_dim"]
+    B = x.shape[0]
+    scale = 1.0 / (P ** 0.5)
+    q = (x @ params["wq"]).reshape(B, H, P).astype(jnp.float32) * scale
+    k = (x @ params["wk"]).reshape(B, H, P).astype(jnp.float32)
+    v = (x @ params["wv"]).reshape(B, H, P).astype(jnp.float32)
+    li, lf = _gates(x, params["w_if"], H)                   # [B,1,H]
+    i_g = jnp.exp(jnp.minimum(li[:, 0], _EXP_CLIP))         # [B,H]
+    f_g = jnp.exp(lf[:, 0])
+    C, n = state
+    C = C * f_g[..., None, None] + jnp.einsum("bhp,bhq,bh->bhpq", v, k, i_g)
+    n = n * f_g[..., None] + k * i_g[..., None]
+    num = jnp.einsum("bhq,bhpq->bhp", q, C)
+    den = jnp.einsum("bhp,bhp->bh", q, n)
+    h = num / jnp.maximum(jnp.abs(den)[..., None], 1.0)
+    h = h.reshape(B, 1, H * P).astype(x.dtype)
+    h = h * jax.nn.sigmoid(x @ params["w_o"])
+    from .layers import rms_norm
+    h = rms_norm(h, params["norm"])
+    return h @ params["out_proj"], (C, n)
+
+
+# ------------------------------------------------------------------ sLSTM --
+def slstm_param_shapes(d_model: int, n_heads: int, d_head: int):
+    d_inner = n_heads * d_head
+    return dict(
+        w_in=(d_model, 4 * d_inner),          # z, i, f, o pre-activations
+        r_rec=(n_heads, d_head, 4 * d_head),  # block-diagonal recurrence
+        norm=(d_inner,),
+        out_proj=(d_inner, d_model),
+    )
+
+
+def slstm_init_state(batch, cfg, dtype=jnp.float32):
+    H, P = cfg["n_heads"], cfg["head_dim"]
+    z = jnp.zeros((batch, H, P), dtype)
+    return (z, z, z)                           # (c, n, h)
+
+
+def _slstm_cell(x_pre, state, r_rec, n_heads, d_head):
+    """x_pre: [B, 4*H*P] input pre-activations; state (c, n, h)."""
+    c, n, h = state
+    B = x_pre.shape[0]
+    rec = jnp.einsum("bhp,hpq->bhq", h, r_rec)              # [B,H,4P]
+    pre = x_pre.reshape(B, n_heads, 4 * d_head) + rec
+    z, i, f, o = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    i = jnp.exp(jnp.minimum(i.astype(jnp.float32), _EXP_CLIP))
+    f = jax.nn.sigmoid(f.astype(jnp.float32))
+    o = jax.nn.sigmoid(o)
+    c = f * c + i * z.astype(jnp.float32)
+    n = f * n + i
+    h_new = o * (c / jnp.maximum(n, 1.0)).astype(o.dtype)
+    return (c, n, h_new)
+
+
+def slstm_block(x, params, cfg, init_state=None, return_state=False):
+    """Strictly sequential scan over time."""
+    H, P = cfg["n_heads"], cfg["head_dim"]
+    B, S, _ = x.shape
+    x_pre = x @ params["w_in"]                               # [B,S,4HP]
+    state = init_state or slstm_init_state(B, cfg)
+
+    def step(st, xt):
+        st = _slstm_cell(xt, st, params["r_rec"], H, P)
+        return st, st[2]
+
+    state, hs = lax.scan(step, state, jnp.moveaxis(x_pre, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H * P).astype(x.dtype)
+    from .layers import rms_norm
+    h = rms_norm(h, params["norm"])
+    y = h @ params["out_proj"]
+    if return_state:
+        return y, state
+    return y
+
+
+def slstm_decode_step(x, params, cfg, state):
+    H, P = cfg["n_heads"], cfg["head_dim"]
+    B = x.shape[0]
+    x_pre = (x @ params["w_in"]).reshape(B, -1)
+    state = _slstm_cell(x_pre, state, params["r_rec"], H, P)
+    h = state[2].reshape(B, 1, H * P).astype(x.dtype)
+    from .layers import rms_norm
+    h = rms_norm(h, params["norm"])
+    return h @ params["out_proj"], state

@@ -1,0 +1,7 @@
+"""Optimizers: AdamW (+int8 states), EF-int8 gradient compression."""
+
+from .adamw import AdamWConfig, adamw_update, init_opt_state
+from .compression import compressed_psum, init_error_buffer
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state",
+           "compressed_psum", "init_error_buffer"]

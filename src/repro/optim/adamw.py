@@ -1,0 +1,131 @@
+"""AdamW with global-norm clipping and optional int8-quantized moments
+(blockwise scales) — the optimizer-state trick that lets the 400B
+llama4-maverick config fit a 256-chip pod (EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update",
+           "quantize_blockwise", "dequantize_blockwise"]
+
+_BLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    quantized_state: bool = False     # int8 m/v with blockwise scales
+    state_dtype: jnp.dtype = jnp.float32
+
+
+def lr_schedule(step, cfg: AdamWConfig):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr_peak * warm * (0.1 + 0.9 * cos)
+
+
+# ----------------------------------------------------- int8 block quant --
+def quantize_blockwise(x):
+    """x [*shape] -> (int8 values, f32 scales per 128-block of the last
+    axis).  Lossy; used for optimizer moments."""
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % _BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32), orig_shape
+
+
+def dequantize_blockwise(q, scale, orig_shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    size = 1
+    for d in orig_shape:
+        size *= d
+    return flat[:size].reshape(orig_shape)
+
+
+# ------------------------------------------------------------- optimizer --
+def init_opt_state(params, cfg: AdamWConfig):
+    def zeros_like_state(p):
+        if cfg.quantized_state:
+            q, s, shp = quantize_blockwise(jnp.zeros_like(p, jnp.float32))
+            return dict(q=q, scale=s)
+        return jnp.zeros(p.shape, cfg.state_dtype)
+
+    return dict(
+        m=jax.tree.map(zeros_like_state, params),
+        v=jax.tree.map(zeros_like_state, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def _read_state(st, like):
+    if isinstance(st, dict):
+        return dequantize_blockwise(st["q"], st["scale"], like.shape)
+    return st.astype(jnp.float32)
+
+
+def _write_state(val, quantized, dtype):
+    if quantized:
+        q, s, _ = quantize_blockwise(val)
+        return dict(q=q, scale=s)
+    return val.astype(dtype)
+
+
+def adamw_update(params, grads, opt_state, cfg: AdamWConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = lr_schedule(step, cfg)
+
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m_st, v_st):
+        g = g.astype(jnp.float32) * clip
+        m = _read_state(m_st, p)
+        v = _read_state(v_st, p)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        update = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if p.ndim >= 2:   # decoupled weight decay on matrices only
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        return (newp,
+                _write_state(m, cfg.quantized_state, cfg.state_dtype),
+                _write_state(v, cfg.quantized_state, cfg.state_dtype))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return (new_params,
+            dict(m=new_m, v=new_v, step=step),
+            dict(grad_norm=gnorm, lr=lr))

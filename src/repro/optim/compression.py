@@ -1,0 +1,74 @@
+"""Error-feedback int8 gradient compression for the data-parallel
+all-reduce (distributed-optimization trick, cf. system spec).
+
+Wire format is int8 (4x fewer bytes than f32 / 2x fewer than bf16): the
+all-reduce is decomposed into reduce-scatter + all-gather where every
+transfer is int8; partial sums are accumulated in f32 locally between the
+two phases.  The quantization residual is carried in an error-feedback
+buffer so the compression bias vanishes over steps (EF-SGD).
+
+Usage (inside shard_map over the data axis):
+    g_hat, new_err = compressed_psum(g + err, axis="data")
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["compressed_psum", "init_error_buffer"]
+
+
+def init_error_buffer(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum(g: jax.Array, axis: str):
+    """Mean-all-reduce of g over `axis` with int8 wire traffic.
+
+    g: f32 array whose leading dim is divisible by the axis size (pad
+    upstream).  Returns (g_mean, local_error) where local_error is the
+    quantization residual to fold into the next step's gradient.
+    """
+    n = lax.psum(1, axis)
+    orig_shape = g.shape
+    flat = g.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    flat = jnp.pad(flat, (0, pad))
+
+    # ---- phase 1: reduce-scatter in int8
+    q, scale = _quant(flat)
+    err = flat - q.astype(jnp.float32) * scale          # local residual
+    chunks = q.reshape(n, -1)                           # [n, C] int8 wire
+    # all_to_all: device i receives chunk i from every peer
+    recv = lax.all_to_all(chunks, axis, split_axis=0, concat_axis=0,
+                          tiled=False)                  # [n, C] int8
+    scales = lax.all_gather(scale, axis)                # [n] f32 (tiny)
+    partial = jnp.sum(recv.astype(jnp.float32)
+                      * scales[:, None], axis=0)        # f32 accumulate
+
+    # ---- phase 2: all-gather the re-quantized partial sums (int8 wire)
+    q2, scale2 = _quant(partial)
+    err2 = partial - q2.astype(jnp.float32) * scale2
+    gq = lax.all_gather(q2, axis)                       # [n, C] int8
+    gs = lax.all_gather(scale2, axis)
+    summed = (gq.astype(jnp.float32) * gs[:, None]).reshape(-1)
+
+    out = summed[: g.size].reshape(orig_shape) / n
+
+    # Error feedback: the phase-1 residual is local (same units as g); the
+    # phase-2 residual (err2) belongs to this device's reduced shard — add
+    # it back at this device's chunk offset so the owner re-injects it.
+    idx = lax.axis_index(axis)
+    chunk_len = err2.shape[0]
+    owned = lax.dynamic_slice(err, (idx * chunk_len,), (chunk_len,)) + err2
+    err_flat = lax.dynamic_update_slice(err, owned, (idx * chunk_len,))
+    local_err = err_flat[: g.size].reshape(orig_shape)
+    return out, local_err

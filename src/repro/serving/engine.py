@@ -1,0 +1,98 @@
+"""Batched serving engine (continuous-batching-lite).
+
+Fixed B decode slots; finished sequences are refilled from the request
+queue; prefill runs per-request (padded to the slot shape) and splices
+its KV into the batch cache.  Demo-grade but end-to-end: examples/serve.py
+drives it and tests/test_serving.py checks slot bookkeeping + output
+consistency with the single-sequence path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.model import decode_step, init_cache, prefill
+
+__all__ = ["Request", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # [S] int32
+    max_new_tokens: int
+    out_tokens: Optional[List[int]] = None
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: ModelConfig, batch_slots: int = 4,
+                 max_len: int = 512, dtype=jnp.float32,
+                 sampler: Optional[Callable] = None):
+        if cfg.n_encoder_layers:
+            raise NotImplementedError(
+                "ServingEngine handles decoder-only archs; use "
+                "prefill/decode_step directly for enc-dec (whisper)")
+        self.params, self.cfg = params, cfg
+        self.B, self.max_len = batch_slots, max_len
+        self.cache = init_cache(cfg, batch_slots, max_len, dtype)
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.slot_remaining = np.zeros(batch_slots, np.int64)
+        self.cur_tokens = jnp.zeros((batch_slots, 1), jnp.int32)
+        self.sampler = sampler or (lambda logits: jnp.argmax(logits, -1))
+        self._decode = jax.jit(
+            lambda p, t, c: decode_step(p, t, self.cfg, c))
+
+    # -- admission ---------------------------------------------------------
+    def _admit(self, slot: int, req: Request):
+        """Prefill a single request and splice its cache into `slot`."""
+        cfg = self.cfg
+        batch = dict(tokens=jnp.asarray(req.prompt[None], jnp.int32))
+        one_cache = init_cache(cfg, 1, self.max_len, jnp.float32)
+        logits, one_cache = prefill(self.params, batch, cfg, one_cache)
+
+        def splice(dst, src):
+            if dst.ndim == 0 or dst.shape[0] != self.B:
+                return dst
+            return dst.at[slot].set(src[0].astype(dst.dtype))
+
+        self.cache = jax.tree.map(splice, self.cache, one_cache)
+        first = self.sampler(logits[:, -1])
+        self.cur_tokens = self.cur_tokens.at[slot, 0].set(first[0])
+        req.out_tokens = [int(first[0])]
+        self.slot_req[slot] = req
+        self.slot_remaining[slot] = req.max_new_tokens - 1
+
+    # -- main loop ----------------------------------------------------------
+    def run(self, requests: List[Request], max_steps: int = 10_000):
+        queue = list(requests)
+        done: List[Request] = []
+        steps = 0
+        while (queue or any(r is not None for r in self.slot_req)) \
+                and steps < max_steps:
+            # fill empty slots
+            for s in range(self.B):
+                if self.slot_req[s] is None and queue:
+                    self._admit(s, queue.pop(0))
+            # one decode step for the whole batch
+            logits, self.cache = self._decode(self.params, self.cur_tokens,
+                                              self.cache)
+            nxt = self.sampler(logits[:, -1])
+            self.cur_tokens = nxt[:, None].astype(jnp.int32)
+            steps += 1
+            for s in range(self.B):
+                req = self.slot_req[s]
+                if req is None:
+                    continue
+                req.out_tokens.append(int(nxt[s]))
+                self.slot_remaining[s] -= 1
+                if self.slot_remaining[s] <= 0:
+                    done.append(req)
+                    self.slot_req[s] = None
+        done.extend(r for r in self.slot_req if r is not None)
+        return done

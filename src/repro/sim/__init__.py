@@ -1,0 +1,13 @@
+"""Cycle-based single-flit network simulator in JAX (paper §V).
+
+- tables:  topology -> dense JAX routing/port tables
+- traffic: §V traffic patterns (uniform, shuffle, bit ops, shift,
+           SF worst-case, DF worst-case)
+- engine:  input-queued router model, lax.scan over cycles
+"""
+
+from .engine import SimConfig, SimResult, simulate
+from .tables import SimTables
+from .traffic import make_traffic
+
+__all__ = ["SimConfig", "SimResult", "simulate", "SimTables", "make_traffic"]

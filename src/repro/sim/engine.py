@@ -1,0 +1,365 @@
+"""Cycle-based single-flit network simulator (paper §V), fully vectorized
+in JAX with a lax.scan over cycles.
+
+Model (faithful to the paper's setup):
+  - single-flit packets, Bernoulli injection (§V), input-queued routers;
+  - V virtual channels per input port, hop-indexed VC assignment (§IV-D)
+    => deadlock-free by construction (verified by tests/test_routing.py);
+  - per-cycle pipeline: route -> switch allocation -> link traversal;
+  - switch allocation: rotating-priority matching over a lookahead window
+    of W packets per input queue (W rounds of maximal matching).  This is
+    the vectorized stand-in for Booksim's internal speedup 2 + iSLIP —
+    without it an input-queued router caps at ~59% throughput from
+    head-of-line blocking (cf. DESIGN.md §5);
+  - one packet per output channel per cycle (channel rate 1 flit/cycle);
+  - backpressure: a packet advances only if the downstream input queue for
+    (port, VC) has a free slot (credit view);
+  - ejection capacity p packets/router/cycle (one per endpoint downlink);
+  - routing modes: 'min', 'val', 'ugal_l', 'ugal_g' (§IV), and 'ecmp'
+    (adaptive equal-cost next-hop — the FT-3 ANCA stand-in).
+
+State layout: packet records are int32 [..., 5] = (dst_router, inter,
+inject_cycle, hops, phase).  Network queues [N, P, V, Qn, 5] as circular
+FIFOs with (head, count); source queues [N_ep, Qs, 5].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .tables import SimTables
+from .traffic import Traffic
+
+__all__ = ["SimConfig", "SimResult", "simulate"]
+
+DST, INTER, TIME, HOPS, PHASE = range(5)
+BIG = jnp.int32(1 << 30)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    injection_rate: float = 0.2       # packets / endpoint / cycle
+    cycles: int = 2000
+    warmup: int = 500
+    vcs: int = 4                      # paper sims use 3; adaptive needs 4
+    q_net: int = 16                   # per-(port,VC) buffer (64 flits/port @ 4 VC)
+    q_src: int = 64
+    mode: str = "min"                 # min | val | ugal_l | ugal_g | ecmp
+    n_val_candidates: int = 4         # §IV-C: 4 works best
+    lookahead: int = 4                # allocation window (HOL mitigation)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SimResult:
+    name: str
+    offered_load: float
+    accepted_load: float              # delivered / cycle / active endpoint
+    avg_latency: float                # cycles, measurement window
+    delivered: int
+    injected: int
+    dropped_at_source: int
+    src_occupancy: float              # mean source-queue depth (saturation)
+    per_cycle_delivered: np.ndarray
+
+    @property
+    def saturated(self) -> bool:
+        return self.src_occupancy > 0.5 * 64 or self.dropped_at_source > 0
+
+
+def simulate(tables: SimTables, traffic: Traffic, cfg: SimConfig) -> SimResult:
+    N, P, V = tables.n_routers, tables.P, cfg.vcs
+    Qn, Qs = cfg.q_net, cfg.q_src
+    n_ep = tables.n_endpoints
+    p = tables.p
+    W = cfg.lookahead
+
+    nbr = jnp.asarray(tables.nbr)
+    rev_port = jnp.asarray(tables.rev_port)
+    port_toward = jnp.asarray(tables.port_toward)
+    dist = jnp.asarray(tables.dist.astype(np.int32))
+    ep_router = jnp.asarray(tables.ep_router)
+    active = jnp.asarray(traffic.active)
+    n_active = int(traffic.active.sum())
+    has_ecmp = tables.ecmp_ports is not None
+    ecmp_ports = jnp.asarray(tables.ecmp_ports) if has_ecmp else None
+
+    # endpoint-router blocks for ejection ranking: endpoints are sorted by
+    # router and each endpoint-router has exactly p endpoints.
+    ep_block_router = jnp.asarray(tables.ep_router[::p])      # [N_epr]
+    n_epr = n_ep // p
+
+    NQ = N * P * V
+    R = NQ + n_ep
+    eids = jnp.arange(n_ep)
+    routers_n = jnp.arange(N)[:, None, None]                  # [N,1,1]
+    req_r_const = jnp.concatenate(
+        [jnp.broadcast_to(routers_n, (N, P, V)).reshape(-1), ep_router])
+
+    rate = cfg.injection_rate
+    mode = cfg.mode
+    C = cfg.n_val_candidates
+
+    def route_decision(dst_r, occ, key):
+        """Per-endpoint injection-time path choice -> (inter, phase)."""
+        src_r = ep_router
+        if mode in ("min", "ecmp"):
+            return dst_r, jnp.ones_like(dst_r)
+        if mode == "val":
+            i = jax.random.randint(key, (n_ep,), 0, N)
+            for bump in (1, 1):
+                bad = (i == src_r) | (i == dst_r)
+                i = jnp.where(bad, (i + bump) % N, i)
+            return i, jnp.zeros_like(dst_r)
+
+        # UGAL: score MIN vs C random VAL candidates
+        cands = jax.random.randint(key, (n_ep, C), 0, N)
+        for bump in (1, 2):
+            bad = (cands == src_r[:, None]) | (cands == dst_r[:, None])
+            cands = jnp.where(bad, (cands + bump) % N, cands)
+
+        def first_occ(s, t):
+            o = port_toward[s, t]
+            return jnp.where(o >= 0, occ[s, jnp.maximum(o, 0)], 0)
+
+        def path_occ(s, t):
+            """Occupancy sum along the MIN path (D <= 2 fast form)."""
+            o1 = port_toward[s, t]
+            m = nbr[s, jnp.maximum(o1, 0)]
+            two = dist[s, t] >= 2
+            second = jnp.where(two, first_occ(m, t), 0)
+            return jnp.where(o1 >= 0, occ[s, jnp.maximum(o1, 0)], 0) + second
+
+        len_min = dist[src_r, dst_r]                              # [n_ep]
+        len_val = dist[src_r[:, None], cands] + dist[cands, dst_r[:, None]]
+        if mode == "ugal_l":
+            score_min = len_min * first_occ(src_r, dst_r)
+            score_val = len_val * first_occ(src_r[:, None], cands)
+        else:  # ugal_g: smallest sum of queues along the whole path
+            score_min = path_occ(src_r, dst_r) + len_min
+            score_val = (path_occ(src_r[:, None], cands)
+                         + path_occ(cands, dst_r[:, None]) + len_val)
+
+        scores = jnp.concatenate([score_min[:, None], score_val], axis=1)
+        inters = jnp.concatenate([dst_r[:, None], cands], axis=1)
+        best = jnp.argmin(scores, axis=1)                         # MIN wins ties
+        inter = jnp.take_along_axis(inters, best[:, None], 1)[:, 0]
+        phase = (best == 0).astype(jnp.int32)                     # MIN: phase 1
+        return inter, phase
+
+    def step(carry, cycle):
+        (nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count, key) = carry
+        key, k_inj, k_dst, k_rt = jax.random.split(key, 4)
+
+        # ---- channel occupancy (credit view): occ[r, o] of downstream queue
+        safe_nbr = jnp.maximum(nbr, 0)
+        safe_rev = jnp.maximum(rev_port, 0)
+        occ = nq_count[safe_nbr, safe_rev, :].sum(-1)             # [N, P]
+        occ = jnp.where(nbr >= 0, occ, BIG)
+
+        # ---- injection ------------------------------------------------
+        coin = jax.random.bernoulli(k_inj, rate, (n_ep,)) & active
+        want = coin & (sq_count < Qs)
+        dropped = (coin & (sq_count >= Qs)).sum()
+        dst_ep = traffic.sample(k_dst)
+        dst_r = ep_router[dst_ep]
+        inter, phase = route_decision(dst_r, occ, k_rt)
+        new_pkt = jnp.stack(
+            [dst_r, inter, jnp.full((n_ep,), cycle, jnp.int32),
+             jnp.zeros((n_ep,), jnp.int32), phase], axis=-1)
+        tail = (sq_head + sq_count) % Qs
+        cur = sq_pkt[eids, tail]
+        sq_pkt = sq_pkt.at[eids, tail].set(
+            jnp.where(want[:, None], new_pkt, cur))
+        sq_count = sq_count + want.astype(jnp.int32)
+        injected = want.sum()
+
+        # ---- W-round switch allocation over the lookahead window --------
+        def desires(pkt, router):
+            tgt = jnp.where(pkt[..., PHASE] == 1, pkt[..., DST],
+                            pkt[..., INTER])
+            eject = (pkt[..., DST] == router) & (pkt[..., PHASE] == 1)
+            if has_ecmp:
+                opts = ecmp_ports[router, tgt]                    # [..., M]
+                r_b = jnp.broadcast_to(router[..., None], opts.shape)
+                o_occ = jnp.where(opts >= 0,
+                                  occ[r_b, jnp.maximum(opts, 0)], BIG)
+                pick = jnp.argmin(o_occ, axis=-1)
+                out_port = jnp.take_along_axis(opts, pick[..., None],
+                                               -1)[..., 0]
+                out_port = jnp.where(eject, -1, out_port)
+            else:
+                out_port = port_toward[router, tgt]
+            out_vc = jnp.minimum(pkt[..., HOPS], V - 1)
+            return out_port, out_vc, eject
+
+        queue_granted = jnp.zeros((R,), bool)
+        grant_slot = jnp.full((R,), -1, jnp.int32)
+        chan_taken = jnp.zeros((N * P,), bool)
+        ej_budget = jnp.full((N,), p, jnp.int32)
+        delivered = jnp.int32(0)
+        lat_sum = jnp.float32(0.0)
+        pending_cnt = nq_count  # grows with this cycle's arrivals
+
+        for w in range(W):
+            nh_w = jnp.take_along_axis(
+                nq_pkt, ((nq_head + w) % Qn)[:, :, :, None, None],
+                axis=3)[:, :, :, 0]                                # [N,P,V,5]
+            n_valid = (nq_count > w) & (nbr[:, :, None] >= 0)
+            sh_w = sq_pkt[eids, (sq_head + w) % Qs]
+            s_valid = sq_count > w
+
+            n_out, n_vc, n_ej = desires(
+                nh_w, jnp.broadcast_to(routers_n, (N, P, V)))
+            s_out, s_vc, s_ej = desires(sh_w, ep_router)
+
+            req_out = jnp.concatenate([n_out.reshape(-1), s_out])
+            req_vc = jnp.concatenate([n_vc.reshape(-1), s_vc])
+            req_ej = jnp.concatenate([n_ej.reshape(-1), s_ej])
+            req_valid = (jnp.concatenate([n_valid.reshape(-1), s_valid])
+                         & ~queue_granted)
+            req_pkt = jnp.concatenate([nh_w.reshape(-1, 5), sh_w], axis=0)
+
+            # --- ejection grants against remaining per-router budget
+            ej = req_valid & req_ej
+            ej_net = ej[:NQ].reshape(N, P * V)
+            ej_src = ej[NQ:].reshape(n_epr, p)
+            shift = cycle % (P * V)
+            rolled = jnp.roll(ej_net, -shift, axis=1)
+            rank_net = jnp.roll(jnp.cumsum(rolled, axis=1) - 1, shift, axis=1)
+            net_total = ej_net.sum(axis=1).astype(jnp.int32)
+            rank_src = jnp.cumsum(ej_src, axis=1) - 1
+            net_first = (cycle % 2) == 0
+            src_total = jnp.zeros((N,), jnp.int32).at[ep_block_router].add(
+                ej_src.sum(axis=1).astype(jnp.int32))
+            rank_net_f = rank_net + jnp.where(net_first, 0,
+                                              src_total[:, None])
+            rank_src_f = rank_src + jnp.where(
+                net_first, net_total[ep_block_router], 0)[:, None]
+            g_net = ej_net & (rank_net_f < ej_budget[:, None])
+            g_src = ej_src & (rank_src_f < ej_budget[ep_block_router][:, None])
+            grant_ej = jnp.concatenate([g_net.reshape(-1), g_src.reshape(-1)])
+            ej_budget = ej_budget - g_net.sum(axis=1).astype(jnp.int32)
+            ej_budget = ej_budget.at[ep_block_router].add(
+                -g_src.sum(axis=1).astype(jnp.int32))
+
+            # --- network channel grants
+            down_r = nbr[req_r_const, jnp.maximum(req_out, 0)]
+            down_port = rev_port[req_r_const, jnp.maximum(req_out, 0)]
+            space = pending_cnt[jnp.maximum(down_r, 0),
+                                jnp.maximum(down_port, 0), req_vc] < Qn
+            keys_seg = req_r_const * P + jnp.maximum(req_out, 0)
+            eligible = (req_valid & ~req_ej & (req_out >= 0) & (down_r >= 0)
+                        & space & ~chan_taken[keys_seg])
+            qidx = jnp.arange(R)
+            rot = (qidx + cycle * 7919 + w * 131) % R
+            score = jnp.where(eligible, rot * R + qidx,
+                              jnp.iinfo(jnp.int32).max)
+            seg_min = jax.ops.segment_min(score, keys_seg, num_segments=N * P)
+            winner = eligible & (score == seg_min[keys_seg])
+
+            chan_taken = chan_taken.at[keys_seg].max(winner)
+            granted_now = winner | grant_ej
+            queue_granted = queue_granted | granted_now
+            grant_slot = jnp.where(granted_now & (grant_slot < 0), w,
+                                   grant_slot)
+
+            # --- apply arrivals immediately (unique (router, port) / cycle)
+            arr_pkt = req_pkt.at[:, HOPS].add(1)
+            arr_pkt = arr_pkt.at[:, PHASE].set(
+                jnp.where(down_r == arr_pkt[:, INTER], 1, arr_pkt[:, PHASE]))
+            a_r = jnp.where(winner, down_r, N)          # OOB => dropped write
+            a_p = jnp.maximum(down_port, 0)
+            a_tail = (nq_head[jnp.minimum(a_r, N - 1), a_p, req_vc]
+                      + pending_cnt[jnp.minimum(a_r, N - 1), a_p,
+                                    req_vc]) % Qn
+            nq_pkt = nq_pkt.at[a_r, a_p, req_vc, a_tail].set(
+                arr_pkt, mode="drop")
+            pending_cnt = pending_cnt.at[a_r, a_p, req_vc].add(
+                winner.astype(jnp.int32), mode="drop")
+
+            # --- stats
+            delivered = delivered + grant_ej.sum().astype(jnp.int32)
+            lat_sum = lat_sum + jnp.where(
+                grant_ej, cycle - req_pkt[:, TIME] + 1, 0
+            ).sum().astype(jnp.float32)
+
+        # ---- dequeues: remove packet at offset grant_slot (shift-up) -----
+        g_net = grant_slot[:NQ].reshape(N, P, V)
+        g_src = grant_slot[NQ:]
+        for j in range(W - 1, 0, -1):
+            # slot head+j <- slot head+j-1 where grant_slot >= j
+            m_net = (g_net >= j)
+            src_slot = jnp.take_along_axis(
+                nq_pkt, ((nq_head + j - 1) % Qn)[:, :, :, None, None],
+                axis=3)[:, :, :, 0]
+            dst_idx = ((nq_head + j) % Qn)
+            cur = jnp.take_along_axis(
+                nq_pkt, dst_idx[:, :, :, None, None], axis=3)[:, :, :, 0]
+            newv = jnp.where(m_net[..., None], src_slot, cur)
+            nq_pkt = jax.vmap(
+                lambda q, i, v: q.at[i].set(v),
+                in_axes=(0, 0, 0))(
+                    nq_pkt.reshape(NQ, Qn, 5), dst_idx.reshape(NQ),
+                    newv.reshape(NQ, 5)).reshape(N, P, V, Qn, 5)
+            m_src = (g_src >= j)
+            s_from = sq_pkt[eids, (sq_head + j - 1) % Qs]
+            s_didx = (sq_head + j) % Qs
+            s_cur = sq_pkt[eids, s_didx]
+            sq_pkt = sq_pkt.at[eids, s_didx].set(
+                jnp.where(m_src[:, None], s_from, s_cur))
+
+        deq_net = (g_net >= 0).astype(jnp.int32)
+        deq_src = (g_src >= 0).astype(jnp.int32)
+        nq_head = (nq_head + deq_net) % Qn
+        nq_count = pending_cnt - deq_net
+        sq_head = (sq_head + deq_src) % Qs
+        sq_count = sq_count - deq_src
+
+        stats = (injected.astype(jnp.int32), delivered,
+                 lat_sum, sq_count.sum().astype(jnp.int32),
+                 dropped.astype(jnp.int32))
+        return (nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count,
+                key), stats
+
+    # ---- initial state -----------------------------------------------------
+    nq_pkt = jnp.zeros((N, P, V, Qn, 5), jnp.int32)
+    nq_head = jnp.zeros((N, P, V), jnp.int32)
+    nq_count = jnp.zeros((N, P, V), jnp.int32)
+    sq_pkt = jnp.zeros((n_ep, Qs, 5), jnp.int32)
+    sq_head = jnp.zeros((n_ep,), jnp.int32)
+    sq_count = jnp.zeros((n_ep,), jnp.int32)
+    key = jax.random.PRNGKey(cfg.seed)
+
+    carry = (nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count, key)
+    cycles = jnp.arange(cfg.cycles, dtype=jnp.int32)
+    carry, (inj, dlv, lat, occ_s, drop) = jax.lax.scan(step, carry, cycles)
+
+    inj = np.asarray(inj, dtype=np.int64)
+    dlv = np.asarray(dlv, dtype=np.int64)
+    lat = np.asarray(lat, dtype=np.float64)
+    occ_s = np.asarray(occ_s, dtype=np.float64)
+    drop = np.asarray(drop, dtype=np.int64)
+
+    w = cfg.warmup
+    meas = slice(w, cfg.cycles)
+    m_cycles = cfg.cycles - w
+    delivered_m = int(dlv[meas].sum())
+    accepted = delivered_m / (m_cycles * max(n_active, 1))
+    avg_lat = float(lat[meas].sum() / max(delivered_m, 1))
+    return SimResult(
+        name=f"{traffic.name}-{cfg.mode}",
+        offered_load=cfg.injection_rate,
+        accepted_load=float(accepted),
+        avg_latency=avg_lat,
+        delivered=int(dlv.sum()),
+        injected=int(inj.sum()),
+        dropped_at_source=int(drop.sum()),
+        src_occupancy=float(occ_s[meas].mean() / max(n_ep, 1)),
+        per_cycle_delivered=dlv,
+    )

@@ -1,0 +1,92 @@
+"""Dense JAX-consumable routing/port tables derived from a Topology."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..core.routing import RoutingTables, build_routing
+from ..core.topology import Topology
+
+__all__ = ["SimTables"]
+
+
+@dataclasses.dataclass
+class SimTables:
+    """Everything the engine needs, as host numpy (moved to device lazily).
+
+    Ports of router r: 0..deg(r)-1 network ports (order = sorted neighbor
+    ids); the ejection "port" is virtual (engine-side).
+    """
+    topo: Topology
+    n_routers: int
+    P: int                        # max network ports (k')
+    p: int                        # endpoints per endpoint-router
+    nbr: np.ndarray               # [N, P] neighbor router (-1 pad)
+    rev_port: np.ndarray          # [N, P] port index at nbr pointing back
+    port_toward: np.ndarray       # [N, N] first-hop port of MIN route (-1 self)
+    dist: np.ndarray              # [N, N] int16
+    ep_router: np.ndarray         # [N_ep] router id of each endpoint
+    ecmp_ports: Optional[np.ndarray] = None   # [N, N, M] equal-cost ports
+
+    @property
+    def n_endpoints(self) -> int:
+        return len(self.ep_router)
+
+    @classmethod
+    def build(cls, topo: Topology, rt: Optional[RoutingTables] = None,
+              ecmp: bool = False) -> "SimTables":
+        rt = rt or build_routing(topo, use_pallas=False,
+                                 equal_cost_sets=ecmp)
+        n = topo.n_routers
+        P = topo.network_radix
+        nbr = topo.neighbor_lists(pad_to=P).astype(np.int32)
+
+        # port index of a given neighbor: inverse of nbr
+        port_of = np.full((n, n), -1, dtype=np.int32)
+        for r in range(n):
+            for o in range(P):
+                v = nbr[r, o]
+                if v >= 0:
+                    port_of[r, v] = o
+
+        rev_port = np.full((n, P), -1, dtype=np.int32)
+        for r in range(n):
+            for o in range(P):
+                v = nbr[r, o]
+                if v >= 0:
+                    rev_port[r, o] = port_of[v, r]
+
+        port_toward = np.full((n, n), -1, dtype=np.int32)
+        nh = rt.next_hop
+        rr = np.repeat(np.arange(n), n)
+        tt = np.tile(np.arange(n), n)
+        mask = nh.ravel() != np.arange(n).repeat(n)  # exclude self
+        port_toward[rr[mask], tt[mask]] = port_of[rr[mask], nh.ravel()[mask]]
+
+        ecmp_ports = None
+        if ecmp:
+            width = 0
+            sets = rt.next_hops_all
+            for r in range(n):
+                for t in range(n):
+                    width = max(width, len(sets[r][t]))
+            ecmp_ports = np.full((n, n, width), -1, dtype=np.int32)
+            for r in range(n):
+                for t in range(n):
+                    opts = sets[r][t]
+                    for i, v in enumerate(opts):
+                        ecmp_ports[r, t, i] = port_of[r, v]
+
+        if topo.endpoint_mask is not None:
+            ep_routers = np.nonzero(topo.endpoint_mask)[0]
+        else:
+            ep_routers = np.arange(n)
+        ep_router = np.repeat(ep_routers, topo.p).astype(np.int32)
+
+        return cls(topo=topo, n_routers=n, P=P, p=topo.p, nbr=nbr,
+                   rev_port=rev_port, port_toward=port_toward,
+                   dist=rt.dist.astype(np.int16), ep_router=ep_router,
+                   ecmp_ports=ecmp_ports)

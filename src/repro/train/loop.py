@@ -1,0 +1,132 @@
+"""Training loop: jitted step (grad-accum microbatching, remat policy),
+checkpoint/restart, straggler + preemption hooks.
+
+`make_train_step` builds a pjit-able step working on GLOBAL arrays; the
+same function serves the CPU smoke tests (1 device) and the 512-chip
+dry-run (it is what launch/dryrun.py lowers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.model import loss_fn
+from ..optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from ..launch.faults import FaultMonitor
+
+__all__ = ["TrainConfig", "make_train_step", "train"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1            # gradient accumulation
+    remat: str = "none"              # none | full | dots_saveable
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    log_every: int = 10
+
+
+def _remat_policy(name: str):
+    if name == "full":
+        return None                          # save nothing, recompute all
+    if name == "dots_saveable":
+        return jax.checkpoint_policies.dots_saveable
+    raise ValueError(name)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    tc: TrainConfig) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    base_loss = loss_fn
+    if tc.remat != "none":
+        base_loss = jax.checkpoint(
+            loss_fn, policy=_remat_policy(tc.remat),
+            static_argnums=(2,))
+
+    def step(params, opt_state, batch):
+        if tc.microbatches > 1:
+            def micro(i, acc):
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // tc.microbatches),
+                        x.shape[0] // tc.microbatches, 0), batch)
+                l, g = jax.value_and_grad(base_loss)(params, mb, cfg)
+                return (acc[0] + l,
+                        jax.tree.map(jnp.add, acc[1], g))
+
+            zero = (jnp.zeros(()),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            loss_sum, grads = jax.lax.fori_loop(0, tc.microbatches, micro,
+                                                zero)
+            loss = loss_sum / tc.microbatches
+            grads = jax.tree.map(lambda g: g / tc.microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(base_loss)(params, batch, cfg)
+
+        params, opt_state, om = adamw_update(params, grads, opt_state,
+                                             opt_cfg)
+        return params, opt_state, dict(loss=loss, **om)
+
+    return step
+
+
+def train(cfg: ModelConfig, opt_cfg: AdamWConfig, tc: TrainConfig,
+          data_source, params, n_steps: int,
+          monitor: Optional[FaultMonitor] = None,
+          jit: bool = True):
+    """Run n_steps; resumes from tc.ckpt_dir if a checkpoint exists.
+    Returns (params, opt_state, history)."""
+    from ..ckpt.checkpoint import (latest_step, restore_checkpoint,
+                                   save_checkpoint)
+
+    opt_state = init_opt_state(params, opt_cfg)
+    start = 0
+    if tc.ckpt_dir:
+        last = latest_step(tc.ckpt_dir)
+        if last is not None:
+            tree = restore_checkpoint(tc.ckpt_dir, last,
+                                      dict(p=params, o=opt_state))
+            params, opt_state = tree["p"], tree["o"]
+            start = last
+
+    step_fn = make_train_step(cfg, opt_cfg, tc)
+    if jit:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+        # donation consumes the caller's buffers — keep the caller's params
+        # usable by working on a private copy
+        params = jax.tree.map(jnp.copy, params)
+
+    history = []
+    pending_save = None
+    for step in range(start, n_steps):
+        t0 = time.time()
+        batch = data_source.batch_at(step)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if monitor is not None:
+            monitor.heartbeat(step)
+            if monitor.should_checkpoint_and_exit():
+                save_checkpoint(tc.ckpt_dir, step + 1,
+                                dict(p=params, o=opt_state))
+                return params, opt_state, history
+        if step % tc.log_every == 0:
+            loss = float(metrics["loss"])
+            history.append(dict(step=step, loss=loss,
+                                dt=time.time() - t0))
+        if tc.ckpt_dir and (step + 1) % tc.ckpt_every == 0:
+            if pending_save is not None:
+                pending_save.join()
+            pending_save = save_checkpoint(
+                tc.ckpt_dir, step + 1, dict(p=params, o=opt_state),
+                async_save=True)
+    if pending_save is not None:
+        pending_save.join()
+    return params, opt_state, history

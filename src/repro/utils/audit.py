@@ -1,0 +1,78 @@
+"""Perf-audit helper: compile a dry-run cell, list the dominant collective
+/ dot contributors with loop multipliers (the §Perf iteration tool)."""
+
+from __future__ import annotations
+
+import re
+
+from .hlo import (DTYPE_BYTES, _elems, _find_entry, _multipliers,
+                  _op_operands, _shape_map, _split_computations, _SHAPE_RE)
+
+__all__ = ["top_collectives", "top_dots"]
+
+
+def _prep(text: str):
+    comps = _split_computations(text)
+    entry = _find_entry(text)
+    mult = _multipliers(comps, entry)
+    shapes = _shape_map(comps)
+
+    def nbytes(name):
+        sh = shapes.get(name)
+        return DTYPE_BYTES[sh[0]] * _elems(sh[1]) if sh else 0.0
+
+    return comps, mult, shapes, nbytes
+
+
+def top_collectives(text: str, n: int = 10):
+    comps, mult, shapes, nbytes = _prep(text)
+    rows = []
+    for cname, lines in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        for raw in lines:
+            line = raw.strip()
+            for kind in ("all-reduce", "all-gather", "reduce-scatter",
+                         "all-to-all", "collective-permute"):
+                for marker in (f" {kind}(", f" {kind}-start("):
+                    i = line.find(marker)
+                    if i < 0:
+                        continue
+                    ops = _op_operands(line, marker)
+                    b = sum(nbytes(o) for o in ops)
+                    rows.append(dict(total=b * m, raw=b, mult=m, kind=kind,
+                                     comp=cname, line=line[:120]))
+    rows.sort(key=lambda r: -r["total"])
+    return rows[:n]
+
+
+def top_dots(text: str, n: int = 10):
+    comps, mult, shapes, nbytes = _prep(text)
+    rows = []
+    for cname, lines in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        for raw in lines:
+            line = raw.strip()
+            if " dot(" not in line:
+                continue
+            res = _SHAPE_RE.search(line)
+            ops = _op_operands(line, " dot(")
+            if not res or not ops:
+                continue
+            res_elems = _elems(res.group(2))
+            lhs = shapes.get(ops[0])
+            contr = 1
+            mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            if lhs and mc and mc.group(1):
+                dims = lhs[1].split(",") if lhs[1] else []
+                for d in mc.group(1).split(","):
+                    if int(d) < len(dims):
+                        contr *= int(dims[int(d)])
+            f = 2.0 * res_elems * contr
+            rows.append(dict(total=f * m, raw=f, mult=m, comp=cname,
+                             line=line[:120]))
+    rows.sort(key=lambda r: -r["total"])
+    return rows[:n]

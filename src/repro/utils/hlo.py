@@ -1,0 +1,272 @@
+"""Loop-aware optimized-HLO analysis: FLOPs, HBM-traffic proxy, and
+collective bytes for the three roofline terms.
+
+Why not compiled.cost_analysis(): XLA:CPU counts every while-loop body
+ONCE, so under scan-over-layers (13-56 units) and blockwise-flash KV loops
+the reported FLOPs are off by orders of magnitude (calibrated in
+EXPERIMENTS.md §Roofline).  We instead parse compiled.as_text():
+
+  1. build an instruction-name -> shape map (operands are printed without
+     shapes in optimized HLO);
+  2. build the computation call graph (calls=, body=, condition=,
+     to_apply=) and assign every computation an execution multiplier —
+     while bodies get their trip count (known_trip_count backend config,
+     else the largest constant in the condition computation);
+  3. FLOPs  = sum over `dot` ops of 2 * |result| * |contraction| * mult;
+  4. bytes  = HBM-traffic proxy * mult:
+        dot: |lhs| + |rhs| + |result|
+        gather / dynamic-slice: 2 * |result|
+        dynamic-update-slice: 3 * |update|      (read-modify-write)
+        scatter: 3 * |updates|
+     (elementwise ops are assumed fused into producers, the TPU norm);
+  5. collective bytes: operand bytes of all-gather / all-reduce /
+     reduce-scatter / all-to-all / collective-permute * mult.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+__all__ = ["collective_bytes", "analyze_hlo", "DTYPE_BYTES"]
+
+DTYPE_BYTES: Dict[str, float] = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SHAPE_RE = re.compile(r"\b(" + "|".join(DTYPE_BYTES) + r")\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^%([\w.\-]+)\s*=\s*")
+_TRIP_RE = re.compile(r"known_trip_count[^\d]*(\d+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLEE_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def _elems(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+def _first_shape(line: str):
+    m = _SHAPE_RE.search(line)
+    return m.groups() if m else None
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur, buf = None, []
+    for line in text.splitlines():
+        if cur is None:
+            if line.rstrip().endswith("{") and "->" in line:
+                m = _HDR_RE.match(line.strip())
+                if m:
+                    cur = m.group(1)
+                    buf = []
+        else:
+            if line.strip() == "}":
+                comps[cur] = buf
+                cur = None
+            else:
+                buf.append(line)
+    return comps
+
+
+def _shape_map(comps: Dict[str, List[str]]) -> Dict[str, tuple]:
+    """instruction name -> (dtype, dims) of its (first/array) shape."""
+    out: Dict[str, tuple] = {}
+    for lines in comps.values():
+        for raw in lines:
+            line = raw.strip()
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            sh = _first_shape(line)
+            if sh:
+                out[m.group(1)] = sh
+    return out
+
+
+def _multipliers(comps: Dict[str, List[str]], entry: str) -> Dict[str, float]:
+    edges: Dict[str, List[Tuple[str, float]]] = {c: [] for c in comps}
+    for cname, lines in comps.items():
+        for line in lines:
+            if " while(" in line:
+                mw = re.search(r"condition=%?([\w.\-]+), body=%?([\w.\-]+)",
+                               line)
+                if not mw:
+                    continue
+                cond, body = mw.groups()
+                mt = _TRIP_RE.search(line)
+                if mt:
+                    n = int(mt.group(1))
+                else:
+                    consts = re.findall(r"constant\((\d+)\)",
+                                        "\n".join(comps.get(cond, [])))
+                    n = max((int(c) for c in consts), default=1)
+                edges[cname].append((body, float(max(n, 1))))
+                edges[cname].append((cond, float(max(n, 1) + 1)))
+            else:
+                for m in _CALLEE_RE.finditer(line):
+                    callee = m.group(1)
+                    if callee in comps:
+                        edges[cname].append((callee, 1.0))
+                mb = re.search(r"branch_computations=\{([^}]*)\}", line)
+                if mb:
+                    for callee in re.split(r",\s*", mb.group(1)):
+                        callee = callee.strip().lstrip("%")
+                        if callee in comps:
+                            edges[cname].append((callee, 1.0))
+
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    if entry in mult:
+        mult[entry] = 1.0
+    for _ in range(len(comps)):
+        changed = False
+        for cname, outs in edges.items():
+            base = mult.get(cname, 0.0)
+            if base == 0.0:
+                continue
+            for callee, f in outs:
+                want = base * f
+                if mult.get(callee, 0.0) < want:
+                    mult[callee] = want
+                    changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _find_entry(text: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+    return m.group(1) if m else ""
+
+
+def _op_operands(line: str, op_marker: str) -> List[str]:
+    i = line.find(op_marker)
+    rest = line[i + len(op_marker):]
+    close = rest.find(")")
+    inner = rest[:close] if close >= 0 else rest
+    return _OPERAND_RE.findall(inner)
+
+
+def analyze_hlo(text: str, bf16_reductions: bool = True) -> dict:
+    comps = _split_computations(text)
+    entry = _find_entry(text)
+    if entry not in comps:
+        comps = {"<all>": text.splitlines()}
+        mult = {"<all>": 1.0}
+    else:
+        mult = _multipliers(comps, entry)
+    shapes = _shape_map(comps)
+
+    def nbytes(name: str) -> float:
+        sh = shapes.get(name)
+        return DTYPE_BYTES[sh[0]] * _elems(sh[1]) if sh else 0.0
+
+    flops = 0.0
+    major_bytes = 0.0
+    coll = {k: 0.0 for k in _COLL_KINDS}
+    coll_counts = {k: 0 for k in _COLL_KINDS}
+
+    for cname, lines in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0.0:
+            continue
+        for raw in lines:
+            line = raw.strip()
+            if not line.startswith("%") and not line.startswith("ROOT"):
+                continue
+
+            # ---- dot
+            if " dot(" in line:
+                res = _first_shape(line)
+                ops = _op_operands(line, " dot(")
+                if res and ops:
+                    res_elems = _elems(res[1])
+                    lhs_sh = shapes.get(ops[0])
+                    contr = 1
+                    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
+                                   line)
+                    if lhs_sh and mc and mc.group(1):
+                        lhs_dims = lhs_sh[1].split(",") if lhs_sh[1] else []
+                        for d in mc.group(1).split(","):
+                            if int(d) < len(lhs_dims):
+                                contr *= int(lhs_dims[int(d)])
+                    flops += 2.0 * res_elems * contr * m
+                    major_bytes += (DTYPE_BYTES[res[0]] * res_elems
+                                    + sum(nbytes(o) for o in ops[:2])) * m
+                continue
+
+            # ---- convolution (treat like dot: result * kernel-contraction)
+            if " convolution(" in line:
+                res = _first_shape(line)
+                ops = _op_operands(line, " convolution(")
+                if res and len(ops) >= 2:
+                    kern = nbytes(ops[1])
+                    flops += 2.0 * _elems(res[1]) * max(kern, 1.0) * m
+                    major_bytes += (DTYPE_BYTES[res[0]] * _elems(res[1])
+                                    + sum(nbytes(o) for o in ops[:2])) * m
+                continue
+
+            # ---- memory-major ops
+            if " gather(" in line or " dynamic-slice(" in line:
+                res = _first_shape(line)
+                if res:
+                    major_bytes += 2.0 * DTYPE_BYTES[res[0]] \
+                        * _elems(res[1]) * m
+                continue
+            if " dynamic-update-slice(" in line:
+                ops = _op_operands(line, " dynamic-update-slice(")
+                if len(ops) >= 2:
+                    major_bytes += 3.0 * nbytes(ops[1]) * m
+                continue
+            if " scatter(" in line:
+                ops = _op_operands(line, " scatter(")
+                if len(ops) >= 3:
+                    major_bytes += 3.0 * nbytes(ops[2]) * m
+                continue
+
+            # ---- collectives
+            matched = False
+            for kind in _COLL_KINDS:
+                for marker in (f" {kind}(", f" {kind}-start("):
+                    i = line.find(marker)
+                    if i < 0:
+                        continue
+                    ops = _op_operands(line, marker)
+                    b = sum(nbytes(o) for o in ops)
+                    if b == 0.0:
+                        res = _first_shape(line)
+                        b = (DTYPE_BYTES[res[0]] * _elems(res[1])
+                             if res else 0.0)
+                    # XLA:CPU widens bf16 reductions to f32 (excess
+                    # precision / "_promoted" apply computations); the TPU
+                    # partitioner reduces activations in bf16.  Count f32
+                    # AR/RS at bf16 width in bf16-param programs.
+                    if bf16_reductions and kind in ("all-reduce",
+                                                    "reduce-scatter"):
+                        if "promoted" in line or " f32[" in line[:60] \
+                                or "(f32[" in line:
+                            b /= 2.0
+                    coll[kind] += b * m
+                    coll_counts[kind] += 1
+                    matched = True
+                    break
+                if matched:
+                    break
+
+    return dict(flops=flops, major_bytes=major_bytes,
+                collective=dict(coll, total=sum(coll.values()),
+                                counts=coll_counts))
+
+
+def collective_bytes(text: str) -> Dict[str, float]:
+    return analyze_hlo(text)["collective"]

@@ -1,0 +1,113 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e targets).
+
+  compute    = HLO_FLOPs / (chips * peak)        peak = 197 TFLOP/s bf16
+  memory     = HLO_bytes / (chips * hbm_bw)      hbm  = 819 GB/s
+  collective = coll_bytes / (chips * link_bw)    link = 50 GB/s (ICI)
+
+cost_analysis() is per-device under SPMD in current JAX; we normalise
+either way via `per_device` (True: numbers already per chip).
+MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE) per train step, 2 N D
+for inference forward — the "useful compute" yardstick.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["V5E", "RooflineTerms", "roofline_from_compiled", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Chip:
+    name: str
+    peak_flops: float          # bf16
+    hbm_bw: float              # bytes/s
+    link_bw: float             # bytes/s per ICI link
+
+
+V5E = Chip("tpu-v5e", 197e12, 819e9, 50e9)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float           # per device
+    hlo_bytes: float           # per device
+    coll_bytes: float          # per device
+    model_flops_total: float   # whole step, all devices
+    chip: Chip = V5E
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / self.chip.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / self.chip.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / self.chip.link_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = dict(compute=self.t_compute, memory=self.t_memory,
+                     collective=self.t_collective)
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:          # roofline lower bound
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (remat / padding / dispatch waste)."""
+        total_hlo = self.hlo_flops * self.chips
+        return self.model_flops_total / max(total_hlo, 1.0)
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilisation at the roofline bound."""
+        per_dev_useful = self.model_flops_total / self.chips
+        return per_dev_useful / (self.step_time * self.chip.peak_flops)
+
+    def row(self) -> dict:
+        return dict(arch=self.arch, shape=self.shape, mesh=self.mesh,
+                    t_compute=self.t_compute, t_memory=self.t_memory,
+                    t_collective=self.t_collective,
+                    bottleneck=self.bottleneck,
+                    useful=self.useful_fraction, mfu=self.mfu)
+
+
+def model_flops(cfg, shape, n_params: int, active_params: Optional[int]
+                = None) -> float:
+    """Whole-step useful FLOPs: 6ND train, 2ND prefill, 2ND/token decode."""
+    n = active_params if active_params is not None else n_params
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence (+ attention over the cache, which is
+    # part of N-independent KV reading — counted in the memory term)
+    return 2.0 * n * shape.global_batch
+
+
+def roofline_from_compiled(compiled, *, arch: str, shape: str, mesh: str,
+                           chips: int, model_flops_total: float,
+                           hlo_text: Optional[str] = None) -> RooflineTerms:
+    """Terms come from the loop-aware HLO analysis (utils.hlo) because
+    XLA:CPU cost_analysis counts while bodies once — see module docstring
+    there.  The numbers are per device (SPMD post-partitioning HLO)."""
+    from .hlo import analyze_hlo
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    a = analyze_hlo(text)
+    return RooflineTerms(arch=arch, shape=shape, mesh=mesh, chips=chips,
+                         hlo_flops=a["flops"], hlo_bytes=a["major_bytes"],
+                         coll_bytes=a["collective"]["total"],
+                         model_flops_total=model_flops_total)

@@ -1,0 +1,152 @@
+"""Per-kernel allclose tests: Pallas (interpret mode on CPU) vs ref.py
+oracles, swept over shapes and dtypes, plus semiring property tests."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import build_slimfly
+from repro.core.topologies import build_dragonfly, build_torus
+from repro.kernels import apsp, decode_attention, minplus, seed_distance
+from repro.kernels.ref import decode_attention_ref, minplus_ref
+
+
+# ---------------------------------------------------------------- minplus --
+@pytest.mark.parametrize("shape", [
+    (1, 8, 8, 8),        # tiny
+    (1, 128, 128, 128),  # exactly one block
+    (2, 100, 70, 130),   # ragged, batched
+    (1, 257, 129, 63),   # off-by-one over block boundaries
+    (3, 16, 300, 16),    # skinny with large K
+])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_minplus_matches_ref(shape, dtype):
+    b, m, k, n = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    a = jnp.asarray(rng.uniform(0, 10, (b, m, k)), dtype=dtype)
+    bb = jnp.asarray(rng.uniform(0, 10, (b, k, n)), dtype=dtype)
+    out = minplus(a, bb)
+    exp = minplus_ref(a, bb)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-6)
+
+
+def test_minplus_unbatched_2d():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.uniform(0, 5, (50, 60)), dtype=jnp.float32)
+    b = jnp.asarray(rng.uniform(0, 5, (60, 40)), dtype=jnp.float32)
+    out = minplus(a, b)
+    assert out.shape == (50, 40)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(minplus_ref(a, b)),
+                               rtol=1e-6)
+
+
+def test_minplus_identity():
+    """The (min,+) identity matrix (0 diag / +inf off-diag) must act as I."""
+    n = 37
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.uniform(0, 9, (n, n)), dtype=jnp.float32)
+    ident = seed_distance(jnp.zeros((n, n), dtype=bool))
+    np.testing.assert_allclose(np.asarray(minplus(a, ident)), np.asarray(a),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(minplus(ident, a)), np.asarray(a),
+                               rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(2, 24), k=st.integers(2, 24), n=st.integers(2, 24),
+    j=st.integers(2, 24), seed=st.integers(0, 2**16),
+)
+def test_minplus_associative(m, k, n, j, seed):
+    """(A*B)*C == A*(B*C) over the (min,+) semiring (property test)."""
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.integers(0, 50, (m, k)), dtype=jnp.float32)
+    B = jnp.asarray(rng.integers(0, 50, (k, n)), dtype=jnp.float32)
+    C = jnp.asarray(rng.integers(0, 50, (n, j)), dtype=jnp.float32)
+    left = minplus(minplus(A, B), C)
+    right = minplus(A, minplus(B, C))
+    np.testing.assert_allclose(np.asarray(left), np.asarray(right), rtol=1e-6)
+
+
+# ------------------------------------------------------------------- apsp --
+@pytest.mark.parametrize("make", [
+    lambda: build_slimfly(5),
+    lambda: build_slimfly(7),
+    lambda: build_dragonfly(h=2),
+    lambda: build_torus(4, 3),
+])
+def test_apsp_matches_bfs_oracle(make):
+    topo = make()
+    d_kernel = np.asarray(apsp(topo.adj, max_diameter=topo.n_routers))
+    d_oracle = topo.distance_matrix()
+    finite = np.isfinite(d_oracle)
+    assert finite.all()  # all comparison graphs are connected
+    np.testing.assert_array_equal(d_kernel[finite], d_oracle[finite])
+
+
+def test_apsp_batched_with_disconnection():
+    """Batched APSP over perturbed adjacencies; removed cut edges must show
+    up as unreachable (>= 1e37)."""
+    topo = build_torus(4, 2)  # ring-ish, easy to cut
+    adj = np.asarray(topo.adj)
+    batch = np.stack([adj, adj])
+    # cut all edges of node 0 in sample 1
+    batch[1, 0, :] = False
+    batch[1, :, 0] = False
+    d = np.asarray(apsp(jnp.asarray(batch), max_diameter=topo.n_routers))
+    assert np.isfinite(d[0]).all() or (d[0] < 1e37).all()
+    assert (d[1, 0, 1:] > 1e37).all()  # node 0 unreachable
+    d0 = topo.distance_matrix()
+    np.testing.assert_array_equal(d[0], d0)
+
+
+# -------------------------------------------------------- decode attention --
+@pytest.mark.parametrize("cfg", [
+    dict(B=1, Hkv=1, G=1, d=32, S=64),      # minimal
+    dict(B=2, Hkv=4, G=7, d=64, S=300),     # ragged everything
+    dict(B=1, Hkv=2, G=8, d=128, S=1024),   # aligned
+    dict(B=3, Hkv=1, G=16, d=80, S=129),    # d and S need padding
+])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+def test_decode_attention_matches_ref(cfg, dtype, tol):
+    B, Hkv, G, d, S = cfg["B"], cfg["Hkv"], cfg["G"], cfg["d"], cfg["S"]
+    rng = np.random.default_rng(B * 1000 + S)
+    q = jnp.asarray(rng.normal(size=(B, Hkv, G, d)), dtype=dtype)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, d)), dtype=dtype)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, d)), dtype=dtype)
+    length = jnp.asarray(rng.integers(1, S + 1, (B,)), dtype=jnp.int32)
+    out = decode_attention(q, k, v, length, bs=128, use_pallas=True)
+    exp = decode_attention_ref(q, k, v, length=length)
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32), np.asarray(exp, dtype=np.float32),
+        rtol=tol, atol=tol)
+
+
+def test_decode_attention_full_length_default():
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.normal(size=(1, 2, 4, 64)), dtype=jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 200, 64)), dtype=jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 200, 64)), dtype=jnp.float32)
+    out = decode_attention(q, k, v, bs=128, use_pallas=True)
+    exp = decode_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_invariance_to_padding():
+    """Extending the cache with garbage beyond `length` must not change
+    the output (the mask is doing its job)."""
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(1, 1, 4, 32)), dtype=jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 100, 32)), dtype=jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 1, 100, 32)), dtype=jnp.float32)
+    length = jnp.asarray([60], dtype=jnp.int32)
+    out1 = decode_attention(q, k, v, length, bs=64, use_pallas=True)
+    k2 = k.at[:, :, 60:].set(1e3)
+    v2 = v.at[:, :, 60:].set(-1e3)
+    out2 = decode_attention(q, k2, v2, length, bs=64, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)

@@ -1,0 +1,67 @@
+"""Resiliency under random link failures (§III-D, Table III)."""
+
+import numpy as np
+import pytest
+
+from repro.core import build_slimfly
+from repro.core.resiliency import (
+    failure_sample,
+    max_tolerated_fraction,
+    metric_after_failures,
+    resilience_sweep,
+)
+from repro.core.topologies import build_dragonfly, build_torus
+
+
+def test_failure_sample_removes_expected_edges():
+    topo = build_slimfly(5)
+    rng = np.random.default_rng(0)
+    adj = failure_sample(topo, 0.2, rng)
+    removed = topo.n_edges - int(adj.sum()) // 2
+    assert removed == int(0.2 * topo.n_edges)
+    assert (adj == adj.T).all()
+
+
+def test_zero_failures_always_survive():
+    topo = build_slimfly(5)
+    rate = metric_after_failures(topo, 0.0, "disconnect", n_samples=3)
+    assert rate == 1.0
+
+
+def test_kernel_engine_agrees_with_scipy():
+    topo = build_slimfly(5)
+    for metric in ["disconnect", "diameter"]:
+        r_scipy = metric_after_failures(topo, 0.3, metric, n_samples=6,
+                                        seed=42, engine="scipy")
+        r_kernel = metric_after_failures(topo, 0.3, metric, n_samples=6,
+                                         seed=42, engine="kernel")
+        assert r_scipy == r_kernel
+
+
+def test_slimfly_more_resilient_than_torus():
+    """Table III ordering: SF >> T3D at comparable size."""
+    sf = build_slimfly(5)                       # 50 routers, k'=7
+    t3 = build_torus(4, 3)                      # 64 routers, k'=6
+    sf_sweep = resilience_sweep(sf, "disconnect", n_samples=10, seed=1)
+    t3_sweep = resilience_sweep(t3, "disconnect", n_samples=10, seed=1)
+    assert max_tolerated_fraction(sf_sweep) > max_tolerated_fraction(t3_sweep)
+
+
+def test_slimfly_beats_dragonfly_resilience():
+    """§III-D1: SF tolerates at least as many failures as a same-scale DF."""
+    sf = build_slimfly(7)                       # 98 routers
+    df = build_dragonfly(h=3)                   # 114 routers
+    sf_r = max_tolerated_fraction(
+        resilience_sweep(sf, "disconnect", n_samples=10, seed=3))
+    df_r = max_tolerated_fraction(
+        resilience_sweep(df, "disconnect", n_samples=10, seed=3))
+    assert sf_r >= df_r
+
+
+def test_diameter_metric_stricter_than_disconnect():
+    topo = build_slimfly(7)
+    dis = max_tolerated_fraction(
+        resilience_sweep(topo, "disconnect", n_samples=8, seed=5))
+    dia = max_tolerated_fraction(
+        resilience_sweep(topo, "diameter", n_samples=8, seed=5))
+    assert dia <= dis

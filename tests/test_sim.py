@@ -1,0 +1,150 @@
+"""Network simulator (§V): conservation laws, routing-mode behaviour,
+traffic patterns, and qualitative reproduction of the paper's Fig 6
+orderings (full curves live in benchmarks/fig6_perf.py)."""
+
+import numpy as np
+import pytest
+
+from repro.core import build_slimfly
+from repro.core.topologies import build_dragonfly, build_fattree3
+from repro.sim import SimConfig, SimTables, make_traffic, simulate
+
+
+@pytest.fixture(scope="module")
+def sf5_tables():
+    return SimTables.build(build_slimfly(5))
+
+
+@pytest.fixture(scope="module")
+def uni5(sf5_tables):
+    return make_traffic(sf5_tables, "uniform")
+
+
+def test_packet_conservation(sf5_tables, uni5):
+    """injected = delivered + still-queued (nothing lost or duplicated)."""
+    cfg = SimConfig(injection_rate=0.4, cycles=300, warmup=0, mode="min",
+                    seed=3)
+    r = simulate(sf5_tables, uni5, cfg)
+    # run longer with zero injection impossible via config; instead check
+    # delivered <= injected and the gap is bounded by total buffering
+    assert r.delivered <= r.injected
+    n_q_slots = (sf5_tables.n_routers * sf5_tables.P * cfg.vcs * cfg.q_net
+                 + sf5_tables.n_endpoints * cfg.q_src)
+    assert r.injected - r.delivered <= n_q_slots
+
+
+def test_low_load_latency_is_distance(sf5_tables, uni5):
+    """At 5% load, avg latency ~ avg hops + pipeline constants (no
+    queueing): must be < 5 cycles in our 1-cycle-per-stage model."""
+    r = simulate(sf5_tables, uni5,
+                 SimConfig(injection_rate=0.05, cycles=500, warmup=200))
+    assert r.avg_latency < 5.0
+    assert r.accepted_load == pytest.approx(0.05, abs=0.01)
+
+
+def test_min_beats_val_latency_uniform(sf5_tables, uni5):
+    """Fig 6a: VAL pays ~2x path length; MIN is lowest-latency."""
+    rmin = simulate(sf5_tables, uni5,
+                    SimConfig(injection_rate=0.2, cycles=500, warmup=200,
+                              mode="min"))
+    rval = simulate(sf5_tables, uni5,
+                    SimConfig(injection_rate=0.2, cycles=500, warmup=200,
+                              mode="val"))
+    assert rmin.avg_latency < rval.avg_latency
+
+
+def test_val_saturates_below_half(sf5_tables, uni5):
+    """Fig 6a: VAL doubles link pressure => accepted < 50% at high load."""
+    r = simulate(sf5_tables, uni5,
+                 SimConfig(injection_rate=0.8, cycles=600, warmup=300,
+                           mode="val"))
+    assert r.accepted_load < 0.5
+
+
+def test_min_high_throughput_uniform(sf5_tables, uni5):
+    """Fig 6a: MIN keeps high accepted bandwidth under uniform traffic."""
+    r = simulate(sf5_tables, uni5,
+                 SimConfig(injection_rate=0.95, cycles=700, warmup=300,
+                           mode="min", lookahead=8))
+    assert r.accepted_load > 0.75
+
+
+def test_worstcase_min_collapses(sf5_tables):
+    """§V-C / Fig 6d: MIN throughput collapses on the adversarial pattern
+    (the single Rx-Ry link bottleneck); VAL/UGAL recover it."""
+    wc = make_traffic(sf5_tables, "worstcase_sf")
+    rmin = simulate(sf5_tables, wc,
+                    SimConfig(injection_rate=0.5, cycles=600, warmup=300,
+                              mode="min"))
+    rval = simulate(sf5_tables, wc,
+                    SimConfig(injection_rate=0.5, cycles=600, warmup=300,
+                              mode="val"))
+    rugal = simulate(sf5_tables, wc,
+                     SimConfig(injection_rate=0.5, cycles=600, warmup=300,
+                               mode="ugal_l"))
+    assert rmin.accepted_load < 0.15          # ~1/(p+1) = 0.2 ceiling
+    assert rval.accepted_load > rmin.accepted_load * 2
+    assert rugal.accepted_load > rmin.accepted_load * 2
+
+
+def test_ugal_l_tracks_min_at_low_load(sf5_tables, uni5):
+    """§V-A: UGAL-L ~ MIN at low load (queues empty => MIN chosen)."""
+    rmin = simulate(sf5_tables, uni5,
+                    SimConfig(injection_rate=0.1, cycles=500, warmup=200,
+                              mode="min"))
+    ru = simulate(sf5_tables, uni5,
+                  SimConfig(injection_rate=0.1, cycles=500, warmup=200,
+                            mode="ugal_l"))
+    assert ru.avg_latency < rmin.avg_latency + 3.0
+
+
+def test_bit_patterns_active_subset(sf5_tables):
+    """§V-B: bit-permutation patterns activate a power-of-two subset."""
+    for pat in ["shuffle", "bitrev", "bitcomp", "shift"]:
+        t = make_traffic(sf5_tables, pat)
+        n_act = int(t.active.sum())
+        assert n_act == 128  # largest power of two <= 200
+        r = simulate(sf5_tables, t,
+                     SimConfig(injection_rate=0.15, cycles=400, warmup=150))
+        assert r.accepted_load == pytest.approx(0.15, abs=0.03)
+
+
+def test_dragonfly_sim_runs():
+    """DF with generic UGAL-L (the paper's DF baseline)."""
+    tables = SimTables.build(build_dragonfly(h=2))
+    uni = make_traffic(tables, "uniform")
+    r = simulate(tables, uni, SimConfig(injection_rate=0.2, cycles=400,
+                                        warmup=150, mode="ugal_l"))
+    assert r.accepted_load == pytest.approx(0.2, abs=0.04)
+    assert r.avg_latency < 20
+
+
+def test_fattree_ecmp_runs():
+    """FT-3 with adaptive ECMP (ANCA stand-in)."""
+    topo = build_fattree3(p=4)
+    tables = SimTables.build(topo, ecmp=True)
+    uni = make_traffic(tables, "uniform")
+    r = simulate(tables, uni, SimConfig(injection_rate=0.3, cycles=400,
+                                        warmup=150, mode="ecmp"))
+    assert r.accepted_load == pytest.approx(0.3, abs=0.05)
+
+
+def test_sf_latency_below_dragonfly():
+    """Fig 6a headline: SF lower latency than DF (diameter 2 vs 3)."""
+    sf_t = SimTables.build(build_slimfly(5))           # N=200
+    df_t = SimTables.build(build_dragonfly(h=2))       # N=90
+    r_sf = simulate(sf_t, make_traffic(sf_t, "uniform"),
+                    SimConfig(injection_rate=0.2, cycles=500, warmup=200,
+                              mode="min"))
+    r_df = simulate(df_t, make_traffic(df_t, "uniform"),
+                    SimConfig(injection_rate=0.2, cycles=500, warmup=200,
+                              mode="ugal_l"))
+    assert r_sf.avg_latency < r_df.avg_latency
+
+
+def test_deterministic_given_seed(sf5_tables, uni5):
+    cfg = SimConfig(injection_rate=0.3, cycles=200, warmup=50, seed=11)
+    r1 = simulate(sf5_tables, uni5, cfg)
+    r2 = simulate(sf5_tables, uni5, cfg)
+    assert r1.delivered == r2.delivered
+    assert r1.avg_latency == r2.avg_latency

@@ -1,0 +1,212 @@
+"""Structural invariants of the Slim Fly construction and the comparison
+topologies (paper §II, §III, Table II)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    GF,
+    balanced_concentration,
+    build_slimfly,
+    enumerate_slimfly_configs,
+    moore_bound,
+    slimfly_params,
+    valid_q,
+)
+from repro.core.topologies import (
+    build_dln,
+    build_dragonfly,
+    build_fattree3,
+    build_flattened_butterfly,
+    build_hypercube,
+    build_longhop_hc,
+    build_polarity_graph,
+    build_torus,
+    dragonfly_for_radix,
+)
+
+SF_QS = [4, 5, 7, 8, 9, 11, 13, 16, 17, 19]
+
+
+# ------------------------------------------------------------ finite field --
+@pytest.mark.parametrize("q", [2, 3, 4, 5, 7, 8, 9, 16, 25, 27])
+def test_gf_field_axioms(q):
+    f = GF(q)
+    idx = np.arange(q)
+    # additive/multiplicative identities
+    np.testing.assert_array_equal(f.add_table[0], idx)
+    np.testing.assert_array_equal(f.mul_table[1], idx)
+    # every nonzero element has a multiplicative inverse (row is a permutation)
+    for a in range(1, q):
+        assert sorted(f.mul_table[a, 1:].tolist()) != sorted([0] * (q - 1))
+        assert 1 in f.mul_table[a, 1:]
+    # primitive element has order q-1
+    assert sorted(f.powers(f.xi, q - 1)) == list(range(1, q))
+
+
+# ----------------------------------------------------------------- SF MMS --
+@pytest.mark.parametrize("q", SF_QS)
+def test_slimfly_structure(q):
+    t = build_slimfly(q)
+    par = slimfly_params(q)
+    assert t.n_routers == 2 * q * q
+    assert (t.degrees == par["kprime"]).all()          # k'-regular
+    assert t.diameter() == 2                            # the headline claim
+    assert t.n_edges == par["kprime"] * t.n_routers // 2
+
+
+def test_slimfly_q19_matches_paper_flagship():
+    """§VI-A example: q=19 => 10830 endpoints, k'=29, p=15, k=44, N_r=722."""
+    par = slimfly_params(19)
+    assert par["kprime"] == 29
+    assert par["n_routers"] == 722
+    assert par["p"] == 15
+    assert par["router_radix"] == 44
+    assert par["n_endpoints"] == 10830
+
+
+def test_hoffman_singleton():
+    """q=5 yields the Hoffman–Singleton graph: 50 vertices, 175 edges,
+    7-regular, diameter 2, girth 5 (Moore graph — meets the bound)."""
+    t = build_slimfly(5)
+    assert t.n_routers == 50 and t.n_edges == 175
+    assert (t.degrees == 7).all() and t.diameter() == 2
+    assert t.n_routers == moore_bound(7, 2)  # 1 + 7 + 7*6 = 50
+    # girth 5: no triangles and no 4-cycles
+    a = t.adj.astype(np.int64)
+    assert np.trace(a @ a @ a) == 0
+    paths2 = a @ a
+    np.fill_diagonal(paths2, 0)
+    assert (paths2[t.adj] == 0).all()  # adjacent pair with 2-path => C4... triangle
+    assert (paths2[~t.adj] <= 1).all()  # two 2-paths between non-adj => C4
+
+
+def test_moore_bound_proximity():
+    """Fig 5a: SF MMS sits within ~12% of the Moore bound (paper reports
+    N_r = 8192 vs MB 9217 at k' = 96, i.e. 8/9 asymptotically)."""
+    for q in [17, 19, 25]:
+        par = slimfly_params(q)
+        mb = moore_bound(par["kprime"], 2)
+        assert par["n_routers"] / mb > 0.85
+
+
+def test_balanced_concentration_formula():
+    """§II-B2: p ~= ceil(k'/2) (within 1 for small networks)."""
+    for q in SF_QS:
+        par = slimfly_params(q)
+        assert abs(par["p"] - int(np.ceil(par["kprime"] / 2))) <= 1
+
+
+def test_enumerate_library():
+    """§VII-A claims 11 balanced SF variants below 20k endpoints."""
+    lib = enumerate_slimfly_configs(20_000)
+    assert len(lib) >= 10
+    qs = [c["q"] for c in lib]
+    assert qs == sorted(qs)
+    assert all(c["n_endpoints"] <= 20_000 for c in lib)
+
+
+@settings(max_examples=10, deadline=None)
+@given(q=st.sampled_from(SF_QS), seed=st.integers(0, 1000))
+def test_slimfly_two_hop_property(q, seed):
+    """Property: ANY pair of routers is connected by a path of length <= 2
+    — sampled pairs checked against the adjacency directly."""
+    t = build_slimfly(q)
+    rng = np.random.default_rng(seed)
+    a, b = rng.integers(0, t.n_routers, 2)
+    adj = t.adj
+    ok = (a == b) or adj[a, b] or bool((adj[a] & adj[b]).any())
+    assert ok
+
+
+# ------------------------------------------------- comparison topologies --
+def test_dragonfly_paper_configs():
+    """§V: DF k=27, p=7 => N_r=1386, N=9702; Table IV: k=43 => 5346/58806."""
+    df = build_dragonfly(h=7)
+    assert df.n_routers == 1386 and df.n_endpoints == 9702
+    assert df.router_radix == 27 and df.diameter() == 3
+    df43 = dragonfly_for_radix(43)
+    assert df43.n_routers == 5346 and df43.n_endpoints == 58806
+
+
+def test_fattree3_paper_config():
+    """§V: FT-3 k=44, p=22 => N_r=1452, N=10648, diameter 4."""
+    ft = build_fattree3(44)
+    assert ft.n_routers == 1452 and ft.n_endpoints == 10648
+    assert ft.diameter() == 4
+
+
+def test_fbf3_structure():
+    fb = build_flattened_butterfly(6, 3)
+    assert fb.n_routers == 216 and fb.diameter() == 3
+    assert (fb.degrees == 3 * 5).all()
+    fb2 = build_flattened_butterfly(8, 2)
+    assert fb2.diameter() == 2
+
+
+def test_torus_diameters():
+    """Table II: T3D diameter = 3/2 * cbrt(N_r) (even radix: 3 * r/2)."""
+    t = build_torus(6, 3)
+    assert t.diameter() == 3 * 3  # 3 dims * floor(6/2)
+    t5 = build_torus(4, 5)
+    assert t5.diameter() == 5 * 2
+
+
+def test_hypercube_diameter():
+    hc = build_hypercube(8)
+    assert hc.diameter() == 8 and (hc.degrees == 8).all()
+
+
+def test_dln_regular_and_low_diameter():
+    d = build_dln(338, 4, seed=1)
+    assert (d.degrees == 6).all()
+    assert 3 <= d.diameter() <= 10  # paper Table II range
+
+
+def test_longhop_bisection_oriented():
+    lh = build_longhop_hc(9)
+    assert lh.n_routers == 512
+    assert lh.network_radix == 9 + 4
+
+
+def test_polarity_graph():
+    """P_u: u^2+u+1 vertices, degree u or u+1, diameter 2 (BDF block)."""
+    for u in [3, 4, 5, 7]:
+        g = build_polarity_graph(u)
+        assert g.n_routers == u * u + u + 1
+        assert g.diameter() == 2
+        degs = set(g.degrees.tolist())
+        assert degs <= {u, u + 1}
+
+
+def test_average_hops_ordering():
+    """Fig 1: SF has the lowest average endpoint-to-endpoint hop count."""
+    sf = build_slimfly(7)            # N=588
+    df = build_dragonfly(h=3)        # N=570
+    ft = build_fattree3(p=9)         # N=729
+    h_sf = sf.average_endpoint_hops()
+    h_df = df.average_endpoint_hops()
+    h_ft = ft.average_endpoint_hops()
+    assert h_sf < h_df < h_ft
+    assert h_sf < 2.0
+
+
+def test_bdf_star_product_diameter3():
+    """§II-C: P_u * K_n has diameter 3 (BDF construction realized)."""
+    from repro.core.topologies import build_bdf
+    for u in [3, 4, 5]:
+        t = build_bdf(u)
+        assert t.diameter() == 3
+        assert t.n_routers == (u * u + u + 1) * max(2, (u + 3) // 2)
+
+
+def test_slimfly_as_dragonfly_groups():
+    """§VII-B: SF groups inside a Dragonfly — diameter <= 2(SF) + 1(global)
+    + 2(SF) = 5, and much lower than a flat ring of the same size."""
+    from repro.core.topologies import slimfly_dragonfly
+    t = slimfly_dragonfly(5, n_groups=4, links_per_pair=2)
+    assert t.n_routers == 200
+    assert t.is_connected()
+    assert t.diameter() <= 5
