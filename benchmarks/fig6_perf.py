@@ -14,8 +14,11 @@ from repro.sim import SimConfig, SimTables, make_traffic, simulate
 
 def run(fast: bool = True):
     full = os.environ.get("REPRO_FULL", "0") == "1" or not fast
+    # REPRO_SMOKE=1: pipeline-exercising minimum (CI / test_benchmarks_smoke)
+    smoke = os.environ.get("REPRO_SMOKE", "0") == "1" and not full
     q = 19 if full else 5
-    cycles, warmup = (3000, 1000) if full else (700, 250)
+    cycles, warmup = (3000, 1000) if full else (
+        (250, 80) if smoke else (700, 250))
 
     sf = SimTables.build(build_slimfly(q))
     df = SimTables.build(build_dragonfly(h=7 if full else 2))
@@ -35,7 +38,8 @@ def run(fast: bool = True):
         return r
 
     # --- 6a uniform: low-load latency + saturation throughput
-    loads = [0.1, 0.5, 0.8] if not full else [0.1, 0.3, 0.5, 0.7, 0.9]
+    loads = ([0.1, 0.3, 0.5, 0.7, 0.9] if full
+             else ([0.5] if smoke else [0.1, 0.5, 0.8]))
     for rate in loads:
         for mode in ["min", "val", "ugal_l", "ugal_g"]:
             sim(sf, "uniform", mode, rate, "sf")
@@ -43,15 +47,18 @@ def run(fast: bool = True):
         sim(ft, "uniform", "ecmp", rate, "ft3")
 
     # --- 6b/6c shift + shuffle
-    for pattern in ["shift", "shuffle"]:
-        for mode in ["min", "ugal_l"]:
+    patterns = ["shift"] if smoke else ["shift", "shuffle"]
+    for pattern in patterns:
+        for mode in (["min"] if smoke else ["min", "ugal_l"]):
             sim(sf, pattern, mode, 0.3, "sf")
-        sim(df, pattern, "ugal_l", 0.3, "df")
+        if not smoke:
+            sim(df, pattern, "ugal_l", 0.3, "df")
 
     # --- 6d worst-case
-    wc_rates = [0.2, 0.5]
+    wc_rates = [0.2] if smoke else [0.2, 0.5]
     for rate in wc_rates:
-        for mode in ["min", "val", "ugal_l"]:
+        for mode in (["ugal_l"] if smoke else ["min", "val", "ugal_l"]):
             sim(sf, "worstcase_sf", mode, rate, "sf")
-        sim(df, "worstcase_df", "ugal_l", rate, "df")
+        if not smoke:
+            sim(df, "worstcase_df", "ugal_l", rate, "df")
     return rows

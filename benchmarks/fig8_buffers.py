@@ -1,6 +1,8 @@
 """Fig 8a: router buffer-size study (worst-case traffic); Fig 8b-e:
 oversubscribed Slim Fly variants."""
 
+import os
+
 from repro.core import build_slimfly
 from repro.sim import SimConfig, SimTables, make_traffic, simulate
 
@@ -8,12 +10,16 @@ from repro.sim import SimConfig, SimTables, make_traffic, simulate
 def run(fast: bool = True):
     rows = []
     q = 5
-    cycles, warmup = (600, 200) if fast else (2000, 700)
+    # REPRO_SMOKE=1: pipeline-exercising minimum (CI / test_benchmarks_smoke)
+    smoke = os.environ.get("REPRO_SMOKE", "0") == "1" and fast
+    cycles, warmup = ((250, 80) if smoke else (600, 200)) if fast \
+        else (2000, 700)
 
     # --- 8a: buffer sizes (total flits/port = 4 VCs * q_net)
     tables = SimTables.build(build_slimfly(q))
     wc = make_traffic(tables, "worstcase_sf")
-    for q_net in ([4, 16, 64] if fast else [2, 4, 8, 16, 32, 64]):
+    for q_net in ([4, 64] if smoke else
+                  [4, 16, 64] if fast else [2, 4, 8, 16, 32, 64]):
         r = simulate(tables, wc, SimConfig(
             injection_rate=0.4, cycles=cycles, warmup=warmup,
             mode="ugal_l", q_net=q_net))
@@ -22,7 +28,7 @@ def run(fast: bool = True):
                          derived=round(r.accepted_load, 4)))
 
     # --- 8b-e: oversubscription (p > balanced)
-    for p in ([4, 5, 6] if fast else [4, 5, 6, 7]):
+    for p in ([4, 6] if smoke else [4, 5, 6] if fast else [4, 5, 6, 7]):
         topo = build_slimfly(q, p=p)
         t = SimTables.build(topo)
         uni = make_traffic(t, "uniform")

@@ -1,0 +1,38 @@
+"""Distributed substrate (DESIGN.md §6).
+
+Three layers, each usable on its own:
+
+- sharding:       FSDP+TP ``PartitionSpec`` assignment for every model
+                  arch in ``repro.configs`` on a ``(*data, "model")``
+                  mesh, plus batch / decode-cache layouts;
+- collectives:    hand-rolled ring collectives (``jax.lax.ppermute``)
+                  whose HLO overlaps compute with communication —
+                  ``collective_matmul_ag`` lowers to a
+                  ``while{dot, collective-permute}`` loop instead of
+                  ``{all-gather, dot}``;
+- topology_aware: an alpha-beta-with-hops cost model (``FabricModel``)
+                  that scores ring vs direct collective algorithms on
+                  any ``repro.core`` topology — the bridge between the
+                  paper's fabric analysis and the training stack.
+"""
+
+from .collectives import (collective_matmul_ag, ring_all_gather,
+                          ring_all_reduce, ring_reduce_scatter)
+from .sharding import (batch_spec, cache_specs, data_axes, param_specs,
+                       sanitize_spec, shard_params)
+from .topology_aware import CollectiveEstimate, FabricModel
+
+__all__ = [
+    "batch_spec",
+    "cache_specs",
+    "data_axes",
+    "param_specs",
+    "sanitize_spec",
+    "shard_params",
+    "collective_matmul_ag",
+    "ring_all_gather",
+    "ring_all_reduce",
+    "ring_reduce_scatter",
+    "CollectiveEstimate",
+    "FabricModel",
+]

@@ -1,0 +1,161 @@
+"""Overlapped ring collectives built on ``jax.lax.ppermute``
+(DESIGN.md §6.2).
+
+Written to be called INSIDE ``jax.shard_map``: every function takes the
+local shard plus a mesh-axis name.  The ring loops are ``lax.fori_loop``
+over the axis size, so XLA lowers them to a single
+``while{dot / add, collective-permute, dynamic-update-slice}`` body —
+communication for ring step i+1 overlaps the compute of step i, and no
+standalone ``all-gather`` op appears in the HLO (asserted by
+``tests/test_distributed.py::test_collective_matmul_overlap_hlo``).
+
+This is the device-level realisation of the two collective algorithms
+``repro.dist.topology_aware.FabricModel`` scores analytically: the ring
+schedule here is the "ring" algorithm; XLA's native one-shot
+``all-reduce`` is the "direct" one.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["ring_all_reduce", "ring_reduce_scatter", "ring_all_gather",
+           "collective_matmul_ag"]
+
+
+def _ring_perm(n: int):
+    """Send to the next-higher device id (mod n)."""
+    return [(j, (j + 1) % n) for j in range(n)]
+
+
+def ring_all_reduce(x: jax.Array, axis: str) -> jax.Array:
+    """Sum ``x`` over ``axis`` via reduce-scatter + all-gather rings.
+
+    2(n-1) ppermute steps of |x|/n bytes each — the bandwidth-optimal
+    schedule.  Payloads that don't divide the axis size are zero-padded
+    internally; the result has ``x``'s shape on every device.
+    """
+    n = lax.psum(1, axis)
+    if n == 1:
+        return x
+    idx = lax.axis_index(axis)
+    perm = _ring_perm(n)
+
+    flat = x.reshape(-1)
+    size = flat.shape[0]
+    pad = (-size) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    buf = flat.reshape(n, -1)                    # chunk c = buf[c]
+
+    # --- reduce-scatter: after step i, chunk (idx - i - 1) holds the
+    # partial sum of devices {idx - i - 1, ..., idx}.
+    def rs_body(i, buf):
+        send = lax.dynamic_slice_in_dim(buf, (idx - i) % n, 1, 0)
+        recv = lax.ppermute(send, axis, perm)
+        k = (idx - 1 - i) % n
+        cur = lax.dynamic_slice_in_dim(buf, k, 1, 0)
+        return lax.dynamic_update_slice_in_dim(buf, cur + recv, k, 0)
+
+    buf = lax.fori_loop(0, n - 1, rs_body, buf, unroll=False)
+
+    # --- all-gather: chunk (idx + 1) % n is complete; circulate the
+    # completed chunks around the same ring.
+    def ag_body(i, buf):
+        send = lax.dynamic_slice_in_dim(buf, (idx + 1 - i) % n, 1, 0)
+        recv = lax.ppermute(send, axis, perm)
+        return lax.dynamic_update_slice_in_dim(buf, recv, (idx - i) % n, 0)
+
+    buf = lax.fori_loop(0, n - 1, ag_body, buf, unroll=False)
+
+    out = buf.reshape(-1)
+    if pad:
+        out = out[:size]
+    return out.reshape(x.shape)
+
+
+def ring_reduce_scatter(x: jax.Array, axis: str) -> jax.Array:
+    """Sum over ``axis``, returning this device's 1/n slice of dim 0
+    (device d gets chunk d — index-aligned with ``ring_all_gather``)."""
+    n = lax.psum(1, axis)
+    if n == 1:
+        return x
+    idx = lax.axis_index(axis)
+    perm = _ring_perm(n)
+    assert x.shape[0] % n == 0, (x.shape, n)
+    buf = x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+    # after step i, chunk (idx - 2 - i) holds the partial sum of
+    # devices {idx - i - 1, ..., idx}; after n-1 steps chunk idx is
+    # complete on device idx.
+    def rs_body(i, buf):
+        send = lax.dynamic_slice_in_dim(buf, (idx - 1 - i) % n, 1, 0)
+        recv = lax.ppermute(send, axis, perm)
+        k = (idx - 2 - i) % n
+        cur = lax.dynamic_slice_in_dim(buf, k, 1, 0)
+        return lax.dynamic_update_slice_in_dim(buf, cur + recv, k, 0)
+
+    buf = lax.fori_loop(0, n - 1, rs_body, buf, unroll=False)
+    own = lax.dynamic_slice_in_dim(buf, idx, 1, 0)
+    return own[0]
+
+
+def ring_all_gather(x: jax.Array, axis: str) -> jax.Array:
+    """Concatenate every device's ``x`` along a new leading ring order
+    (device d's shard lands at index d), via n-1 ppermute steps."""
+    n = lax.psum(1, axis)
+    idx = lax.axis_index(axis)
+    out = jnp.zeros((n,) + x.shape, x.dtype)
+    out = lax.dynamic_update_slice_in_dim(out, x[None], idx, 0)
+    if n == 1:
+        return out
+    perm = _ring_perm(n)
+
+    def body(i, carry):
+        out, cur = carry
+        cur = lax.ppermute(cur, axis, perm)
+        src = (idx - 1 - i) % n
+        out = lax.dynamic_update_slice_in_dim(out, cur[None], src, 0)
+        return out, cur
+
+    out, _ = lax.fori_loop(0, n - 1, body, (out, x), unroll=False)
+    return out
+
+
+def collective_matmul_ag(xs: jax.Array, ws: jax.Array,
+                         axis: str) -> jax.Array:
+    """``all_gather(xs, axis) @ ws`` as an overlapped ring matmul.
+
+    ``xs``: this device's [rows/n, K] shard of the activations;
+    ``ws``: [K, N] weights (replicated or row-sharded upstream).
+    Each ring step multiplies the shard currently held against ``ws``
+    and writes the [rows/n, N] block into its global row position while
+    the shard moves to the ring neighbour — the collective-permute for
+    step i+1 overlaps the dot of step i (Wang et al., "Overlap
+    communication with dependent computation via decomposition", the
+    pattern XLA's native all-gather-matmul pass targets).
+    """
+    n = lax.psum(1, axis)
+    idx = lax.axis_index(axis)
+    block = xs.shape[0]
+    out = jnp.zeros((n * block, ws.shape[-1]),
+                    jnp.promote_types(xs.dtype, ws.dtype))
+    if n == 1:
+        return lax.dynamic_update_slice_in_dim(out, xs @ ws, 0, 0)
+    perm = _ring_perm(n)
+
+    def body(i, carry):
+        out, cur = carry
+        src = (idx - i) % n          # owner of the shard currently held
+        out = lax.dynamic_update_slice_in_dim(out, cur @ ws, src * block,
+                                              0)
+        cur = lax.ppermute(cur, axis, perm)
+        return out, cur
+
+    # n-1 permutes suffice: the last shard's dot happens after the loop
+    # (permuting it onward would send a full shard nobody reads)
+    out, cur = lax.fori_loop(0, n - 1, body, (out, xs), unroll=False)
+    last = (idx - (n - 1)) % n
+    return lax.dynamic_update_slice_in_dim(out, cur @ ws, last * block, 0)

@@ -1,0 +1,183 @@
+"""FSDP + tensor-parallel sharding rules (DESIGN.md §6.1).
+
+Mesh convention: the LAST mesh axis is the tensor-parallel axis (named
+"model" everywhere in this repo); every other axis carries the batch
+("data", or ("pod", "data") multi-pod).  Rules are name-based over the
+``repro.models.model.param_shapes`` tree and divisibility-safe: an axis
+is only assigned to a tensor dimension it divides (``sanitize_spec``),
+so the same code covers every arch in ``repro.configs`` — including
+``scan_layers=True`` stacked shapes, whose leading layer-unit dimension
+is never sharded (``lax.scan`` iterates over it).
+
+TP assignment mirrors the Megatron column/row split: output-feature
+dims shard over "model" for up-projections (wq/wk/wv/w_gate/w_up/...),
+the contraction dim shards for down-projections (wo/w_down/out_proj) so
+the following all-reduce is the only collective in the layer; the
+embedding shards its vocab dim.  FSDP then shards one remaining dim of
+every weight over the data axes (ZeRO-3 style parameter sharding).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["data_axes", "batch_spec", "sanitize_spec", "param_specs",
+           "shard_params", "cache_specs"]
+
+# weights whose dim -2 (the contraction dim of the following matmul, or
+# the vocab dim of the embedding) carries the tensor-parallel axis; every
+# other >=2-D weight shards its LAST dim.
+_ROW_SHARDED = frozenset({"wo", "w_down", "sh_down", "out_proj", "embed"})
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """All mesh axes except the (last, tensor-parallel) one."""
+    return tuple(mesh.axis_names[:-1])
+
+
+def _axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Batch arrays shard dim 0 over the data axes, replicate the rest."""
+    axes = data_axes(mesh)
+    if not axes:
+        return P()
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def sanitize_spec(shape, spec: P, mesh: Mesh) -> P:
+    """Drop mesh axes from ``spec`` that do not divide their dim.
+
+    Keeps, per dimension, the longest prefix of the assigned axes whose
+    cumulative size divides the dim — the spec that comes out is always
+    valid to materialise on ``mesh``.
+    """
+    sizes = _axis_sizes(mesh)
+    out = []
+    for dim, entry in enumerate(spec):
+        if entry is None or dim >= len(shape):
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept, prod = [], 1
+        for a in axes:
+            if a not in sizes or shape[dim] % (prod * sizes[a]) != 0:
+                break
+            kept.append(a)
+            prod *= sizes[a]
+        out.append(tuple(kept) if len(kept) > 1
+                   else (kept[0] if kept else None))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def _leaf_shape(leaf) -> Tuple[int, ...]:
+    if isinstance(leaf, tuple):
+        return tuple(int(d) for d in leaf)
+    return tuple(int(d) for d in leaf.shape)
+
+
+def _is_shape(x) -> bool:
+    return (isinstance(x, tuple)
+            and all(isinstance(i, (int, np.integer)) for i in x))
+
+
+def _spec_for(name: str, shape, stacked: bool, mesh: Mesh,
+              fsdp: bool) -> P:
+    """Spec for one weight.  ``stacked``: leading dim is the scan-unit
+    dim (never sharded)."""
+    sizes = _axis_sizes(mesh)
+    model = mesh.axis_names[-1]
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([sizes[a] for a in dp])) if dp else 1
+
+    off = 1 if stacked else 0
+    eff = shape[off:]
+    entries: list = [None] * len(shape)
+    if len(eff) >= 2:
+        model_dim = (len(shape) - 2 if name in _ROW_SHARDED
+                     else len(shape) - 1)
+        if shape[model_dim] % sizes[model] == 0:
+            entries[model_dim] = model
+        else:
+            model_dim = -1                       # nothing carries TP
+        if fsdp and dp:
+            # prefer the dim opposite the TP dim, then any remaining one
+            pref = ([len(shape) - 2] if model_dim == len(shape) - 1
+                    else [len(shape) - 1])
+            pref += [d for d in range(off, len(shape))
+                     if d not in pref and d != model_dim]
+            for d in pref:
+                if entries[d] is None and shape[d] % dp_size == 0:
+                    entries[d] = dp if len(dp) > 1 else dp[0]
+                    break
+    while entries and entries[-1] is None:
+        entries.pop()
+    return sanitize_spec(shape, P(*entries), mesh)
+
+
+def param_specs(params_or_shapes, mesh: Mesh, fsdp: bool = False):
+    """PartitionSpec tree matching ``param_shapes(cfg)`` (or an actual
+    params tree — leaves may be shape tuples or arrays)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params_or_shapes, is_leaf=_is_shape)
+    specs = []
+    for path, leaf in flat:
+        names = [str(getattr(k, "key", getattr(k, "idx", k)))
+                 for k in path]
+        name = names[-1] if names else ""
+        stacked = "layers_stack" in names
+        specs.append(_spec_for(name, _leaf_shape(leaf), stacked, mesh,
+                               fsdp))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def shard_params(params, mesh: Mesh, fsdp: bool = True):
+    """device_put every leaf with its ``param_specs`` sharding (global
+    arrays — works from single-host replicated inputs)."""
+    specs = param_specs(params, mesh, fsdp=fsdp)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        params, specs)
+
+
+def cache_specs(mesh: Mesh, cache_tree, seq_shard_kv: bool = False):
+    """Decode-cache layout: batch over data axes everywhere; KV tensors
+    [B, Hkv, S, Dh] shard heads over "model" (or the sequence dim when
+    ``seq_shard_kv`` — the right layout when Hkv < tp size); recurrent
+    SSM/xLSTM states shard their head dim when it divides."""
+    model = mesh.axis_names[-1]
+    dp = data_axes(mesh)
+    b_entry = (dp if len(dp) > 1 else dp[0]) if dp else None
+
+    def spec(path, leaf):
+        shape = _leaf_shape(leaf)
+        names = [str(getattr(k, "key", getattr(k, "idx", k)))
+                 for k in path]
+        name = names[-1] if names else ""
+        entries: list = [None] * len(shape)
+        if shape:
+            entries[0] = b_entry
+        if "cross_kv" in names and len(shape) == 4:
+            # whisper cross-attention KV [B, F, Hkv, Dh]: heads on dim 2
+            # (frames on dim 1 only under context parallelism)
+            entries[1 if seq_shard_kv else 2] = model
+        elif name in ("k", "v") and len(shape) == 4:
+            # ring caches [B, Hkv, S, Dh]: heads on dim 1 (or the
+            # sequence dim when Hkv doesn't divide the tp size)
+            entries[2 if seq_shard_kv else 1] = model
+        elif len(shape) >= 2:
+            # recurrent states [B, H, ...]: heads over model
+            entries[1] = model
+        return sanitize_spec(shape, P(*entries), mesh)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, l) for p, l in flat])

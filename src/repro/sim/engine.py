@@ -66,6 +66,13 @@ class SimResult:
     dropped_at_source: int
     src_occupancy: float              # mean source-queue depth (saturation)
     per_cycle_delivered: np.ndarray
+    # end-of-cycle snapshots for the flit-conservation invariant
+    # (tests/test_sim.py): cumsum(injected) == cumsum(delivered) +
+    # in_flight at EVERY cycle prefix; dropped packets never enter the
+    # network (refused at a full source queue).
+    per_cycle_injected: np.ndarray = None
+    per_cycle_in_flight: np.ndarray = None
+    per_cycle_dropped: np.ndarray = None
 
     @property
     def saturated(self) -> bool:
@@ -321,9 +328,10 @@ def simulate(tables: SimTables, traffic: Traffic, cfg: SimConfig) -> SimResult:
         sq_head = (sq_head + deq_src) % Qs
         sq_count = sq_count - deq_src
 
+        in_flight = (nq_count.sum() + sq_count.sum()).astype(jnp.int32)
         stats = (injected.astype(jnp.int32), delivered,
                  lat_sum, sq_count.sum().astype(jnp.int32),
-                 dropped.astype(jnp.int32))
+                 dropped.astype(jnp.int32), in_flight)
         return (nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count,
                 key), stats
 
@@ -338,13 +346,15 @@ def simulate(tables: SimTables, traffic: Traffic, cfg: SimConfig) -> SimResult:
 
     carry = (nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count, key)
     cycles = jnp.arange(cfg.cycles, dtype=jnp.int32)
-    carry, (inj, dlv, lat, occ_s, drop) = jax.lax.scan(step, carry, cycles)
+    carry, (inj, dlv, lat, occ_s, drop, infl) = jax.lax.scan(step, carry,
+                                                             cycles)
 
     inj = np.asarray(inj, dtype=np.int64)
     dlv = np.asarray(dlv, dtype=np.int64)
     lat = np.asarray(lat, dtype=np.float64)
     occ_s = np.asarray(occ_s, dtype=np.float64)
     drop = np.asarray(drop, dtype=np.int64)
+    infl = np.asarray(infl, dtype=np.int64)
 
     w = cfg.warmup
     meas = slice(w, cfg.cycles)
@@ -362,4 +372,7 @@ def simulate(tables: SimTables, traffic: Traffic, cfg: SimConfig) -> SimResult:
         dropped_at_source=int(drop.sum()),
         src_occupancy=float(occ_s[meas].mean() / max(n_ep, 1)),
         per_cycle_delivered=dlv,
+        per_cycle_injected=inj,
+        per_cycle_in_flight=infl,
+        per_cycle_dropped=drop,
     )

@@ -1,0 +1,71 @@
+"""Use hypothesis when installed; otherwise a minimal deterministic
+fallback so the property-test modules still COLLECT AND RUN from a
+clean environment (hypothesis is a dev extra, see requirements-dev.txt).
+
+The fallback implements just what this repo's tests use — ``@given``
+with keyword strategies ``st.integers`` / ``st.sampled_from`` and
+``@settings(max_examples=..., deadline=...)`` — by running the test
+body on ``max_examples`` pseudo-random draws from a per-test seeded
+generator (crc32 of the test name, so failures reproduce)."""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+try:                                     # real hypothesis, if available
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample         # (rng) -> value
+
+    class st:                            # noqa: N801 - mimic module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(
+                lambda rng: seq[int(rng.integers(len(seq)))])
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = _np.random.default_rng(
+                    zlib.crc32(fn.__name__.encode()))
+                for _ in range(n):
+                    drawn = {k: s.sample(rng)
+                             for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+            # hide the drawn parameters from pytest's fixture
+            # resolution: the wrapper itself takes only the fixtures
+            # the ORIGINAL test declares beyond the strategies
+            params = [p for name, p in
+                      inspect.signature(fn).parameters.items()
+                      if name not in strategies]
+            wrapper.__signature__ = inspect.Signature(params)
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -1,0 +1,29 @@
+"""Every benchmark module's fast path must import, run, and emit sane
+rows — catches import breakage (e.g. a missing repro.dist) and NaN/inf
+regressions in derived values without asserting on the numbers."""
+
+import math
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)
+
+from benchmarks.run import MODULES  # noqa: E402
+
+
+@pytest.mark.parametrize("modname", MODULES)
+def test_benchmark_fast_mode(modname, monkeypatch):
+    monkeypatch.setenv("REPRO_SMOKE", "1")   # sim-heavy modules shrink
+    monkeypatch.delenv("REPRO_FULL", raising=False)
+    mod = __import__(f"benchmarks.{modname}", fromlist=["run"])
+    rows = mod.run(fast=True)
+    assert isinstance(rows, list) and rows, f"{modname}: no rows"
+    for row in rows:
+        assert "name" in row, (modname, row)
+        derived = row.get("derived", 0)
+        assert isinstance(derived, (int, float)), (modname, row)
+        assert math.isfinite(derived), (modname, row)

@@ -1,0 +1,130 @@
+"""FabricModel (repro.dist.topology_aware): alpha-beta-with-hops
+collective estimates — monotonicity, ring/direct crossover on low- vs
+high-diameter fabrics, and topology sensitivity of the latency term."""
+
+import numpy as np
+import pytest
+
+from repro.core import build_slimfly
+from repro.core.topologies import build_dragonfly, build_fattree3
+from repro.dist.topology_aware import FabricModel
+
+
+@pytest.fixture(scope="module")
+def sf7():
+    return FabricModel(build_slimfly(7))
+
+
+@pytest.fixture(scope="module")
+def ft3():
+    return FabricModel(build_fattree3(p=8))
+
+
+def group_of(fm, k=32):
+    return np.arange(0, fm.n_nodes, max(1, fm.n_nodes // k))[:k]
+
+
+# ------------------------------------------------------------ structure --
+def test_estimates_have_both_algorithms(sf7):
+    est = sf7.estimate("all_reduce", 1e6, group_of(sf7))
+    assert set(est) == {"ring", "direct", "best"}
+    assert est["ring"].algorithm == "ring"
+    assert est["direct"].algorithm == "direct"
+    assert est["best"].time_s == min(est["ring"].time_s,
+                                     est["direct"].time_s)
+    for e in est.values():
+        assert np.isfinite(e.time_s) and e.time_s > 0
+        assert e.time_s == pytest.approx(e.latency_s + e.bandwidth_s)
+
+
+def test_trivial_groups_cost_nothing(sf7):
+    for k in (0, 1):
+        est = sf7.estimate("all_reduce", 1e9, np.arange(k))
+        assert est["best"].time_s == 0.0
+
+
+# ---------------------------------------------------------- monotonicity --
+@pytest.mark.parametrize("collective", ["all_reduce", "all_to_all",
+                                        "all_gather", "reduce_scatter"])
+def test_estimates_monotone_in_payload(sf7, ft3, collective):
+    payloads = np.logspace(2, 10, 17)          # 100 B .. 10 GB
+    for fm in (sf7, ft3):
+        g = group_of(fm)
+        for algo in ("ring", "direct", "best"):
+            times = [fm.estimate(collective, p, g)[algo].time_s
+                     for p in payloads]
+            assert all(b > a for a, b in zip(times, times[1:])), (
+                collective, algo, times)
+
+
+def test_estimates_monotone_in_group_size(sf7):
+    """More participants => more time, either algorithm (fixed payload)."""
+    for algo in ("ring", "direct"):
+        times = [sf7.estimate("all_reduce", 1e8,
+                              group_of(sf7, k))[algo].time_s
+                 for k in (8, 16, 32, 64)]
+        assert all(b > a for a, b in zip(times, times[1:])), (algo, times)
+
+
+# ------------------------------------------------------ ring vs direct --
+def test_direct_wins_small_payload_on_diameter2_slimfly(sf7):
+    """On a diameter-2 Slim Fly a latency-bound (small) collective should
+    go one-shot: direct pays alpha + <=2 hops once; the ring pays
+    2(k-1) alphas."""
+    assert sf7.topo.diameter() == 2
+    est = sf7.estimate("all_reduce", 4 * 1024, group_of(sf7, 32))
+    assert est["direct"].time_s < est["ring"].time_s
+    assert est["best"].algorithm == "direct"
+
+
+def test_ring_wins_asymptotically_on_fattree(ft3):
+    """Bandwidth-bound (large) collectives: the ring moves 2(k-1)/k * P
+    per NIC vs (k-1) * P for direct — ring wins on ANY fabric once the
+    payload is big enough, fat tree included."""
+    g = group_of(ft3, 32)
+    small = ft3.estimate("all_reduce", 1024, g)
+    large = ft3.estimate("all_reduce", 10e9, g)
+    assert large["best"].algorithm == "ring"
+    assert large["ring"].time_s < large["direct"].time_s
+    # and the crossover exists: direct was winning down at 1 KiB
+    assert small["best"].algorithm == "direct"
+
+
+def test_single_crossover_direct_then_ring(sf7, ft3):
+    """On every fabric the payload axis splits into exactly two regimes:
+    latency-bound (direct) below a single crossover, bandwidth-bound
+    (ring) above it — the decision never flips back."""
+    payloads = np.logspace(1, 11, 41)
+    for fm in (sf7, ft3):
+        g = group_of(fm, 32)
+        algos = [fm.estimate("all_reduce", p, g)["best"].algorithm
+                 for p in payloads]
+        assert algos[0] == "direct" and algos[-1] == "ring"
+        flips = sum(a != b for a, b in zip(algos, algos[1:]))
+        assert flips == 1, algos
+
+
+# ------------------------------------------------------ hops sensitivity --
+def test_latency_term_tracks_hop_count(sf7, ft3):
+    """Same group size + payload: the fabric with more hops per pair
+    pays more latency for the direct algorithm."""
+    df = FabricModel(build_dragonfly(h=3))
+    k = 32
+    ests = {}
+    for name, fm in [("sf", sf7), ("df", df), ("ft", ft3)]:
+        e = fm.estimate("all_reduce", 1024, group_of(fm, k))["direct"]
+        ests[name] = e
+    assert ests["sf"].mean_hops <= 2.0
+    assert ests["ft"].mean_hops > ests["sf"].mean_hops
+    assert ests["ft"].latency_s > ests["sf"].latency_s
+
+
+def test_colocated_group_is_cheaper(sf7):
+    """p endpoints share a router (0 hops): a rack-local group must cost
+    less in latency than a scattered one of equal size."""
+    p = sf7.topo.p
+    local = np.arange(2 * p)                      # two adjacent routers
+    spread = group_of(sf7, 2 * p)
+    e_local = sf7.estimate("all_reduce", 1e6, local)
+    e_spread = sf7.estimate("all_reduce", 1e6, spread)
+    assert e_local["direct"].latency_s <= e_spread["direct"].latency_s

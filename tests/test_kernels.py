@@ -6,8 +6,9 @@ import pytest
 
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+# hypothesis when installed, deterministic fallback otherwise
+from _hypothesis_compat import given, settings, st
 
 from repro.core import build_slimfly
 from repro.core.topologies import build_dragonfly, build_torus

@@ -3,8 +3,9 @@ acyclicity), Valiant paths, channel load (§II-B2)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+# hypothesis when installed, deterministic fallback otherwise
+from _hypothesis_compat import given, settings, st
 
 from repro.core import build_slimfly
 from repro.core.routing import (

@@ -3,8 +3,9 @@ topologies (paper §II, §III, Table II)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+# hypothesis when installed, deterministic fallback otherwise
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     GF,
