@@ -25,9 +25,17 @@ def run(fast: bool = True):
     ft = SimTables.build(build_fattree3(p=22 if full else 4), ecmp=True)
 
     rows = []
+    # one Traffic per (tables, pattern): simulate()'s compile cache is
+    # keyed on the traffic object, so the load sweep reuses one
+    # compiled scan per (topology, pattern, mode) instead of retracing
+    # at every rate point
+    traffics = {}
 
     def sim(tables, pattern, mode, rate, tag):
-        tr = make_traffic(tables, pattern)
+        tr = traffics.get((id(tables), pattern))
+        if tr is None:
+            tr = traffics[(id(tables), pattern)] = make_traffic(tables,
+                                                                pattern)
         r = simulate(tables, tr, SimConfig(
             injection_rate=rate, cycles=cycles, warmup=warmup, mode=mode,
             lookahead=6 if full else 4))

@@ -15,6 +15,7 @@ MODULES = [
     "fig5c_bisection",
     "table3_resiliency",
     "fig6_perf",
+    "workloads_jct",
     "fig8_buffers",
     "table4_cost",
     "topology_collectives",

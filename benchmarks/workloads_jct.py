@@ -1,0 +1,77 @@
+"""Closed-loop workload JCT: ring all-reduce / 2D stencil / graph
+scatter on SF vs Dragonfly vs fat tree at EQUAL participating-endpoint
+counts, MIN vs UGAL (DESIGN.md §7; the paper's §I claim that Slim Fly
+wins under HPC workloads, measured as makespan instead of open-loop
+latency/throughput).
+
+For ring all-reduce, each row also carries the cycle-calibrated
+`FabricModel` estimate ratio (measured / analytic) — the cross-check
+that keeps the planning-time model honest against the cycle sim.
+
+fast mode: q=5 Slim Fly, 32 ranks.  REPRO_SMOKE=1: 16 ranks, smaller
+messages (CI pipeline exercise).  REPRO_FULL=1: q=7, 128 ranks, bigger
+payloads.
+"""
+
+import os
+
+from repro.core import build_slimfly
+from repro.core.topologies import build_dragonfly, build_fattree3
+from repro.sim import SimTables
+from repro.sim.workloads import (
+    WorkloadSimConfig,
+    fabric_crosscheck,
+    graph_scatter,
+    ring_all_reduce,
+    run_workload,
+    stencil,
+)
+
+
+def run(fast: bool = True):
+    full = os.environ.get("REPRO_FULL", "0") == "1" or not fast
+    smoke = os.environ.get("REPRO_SMOKE", "0") == "1" and not full
+
+    if full:
+        q, ranks, chunk_flits, halo, scat = 7, 128, 32, 64, 32
+        grid = (16, 8)
+    elif smoke:
+        q, ranks, chunk_flits, halo, scat = 5, 16, 4, 8, 8
+        grid = (4, 4)
+    else:
+        q, ranks, chunk_flits, halo, scat = 5, 32, 8, 16, 16
+        grid = (8, 4)
+
+    fabrics = [
+        ("sf", SimTables.build(build_slimfly(q)), "min"),
+        ("df", SimTables.build(build_dragonfly(h=3 if full else 2)),
+         "ugal_l"),
+        ("ft3", SimTables.build(build_fattree3(p=6 if full else 4),
+                                ecmp=True), "ecmp"),
+    ]
+    workloads = [
+        ring_all_reduce(ranks, chunk_flits),
+        stencil(grid, halo, iters=2),
+        graph_scatter(ranks, scat, iters=2, seed=0),
+    ]
+
+    rows = []
+    for tag, tables, mode in fabrics:
+        assert tables.n_endpoints >= ranks, (tag, tables.n_endpoints)
+        modes = [mode] if (smoke or tag != "sf") else [mode, "ugal_l"]
+        for wl in workloads:
+            for m in modes:
+                r = run_workload(tables, wl, WorkloadSimConfig(
+                    mode=m, chunk=128 if not full else 512))
+                row = dict(
+                    name=f"workloads_jct/{tag}/{wl.name}/{m}",
+                    derived=float(r.makespan),
+                    bw=round(r.achieved_bw, 2),
+                    completed=r.completed)
+                if wl.name.startswith("ring_all_reduce") and r.completed:
+                    cc = fabric_crosscheck(
+                        tables.topo, "all_reduce", ranks * chunk_flits,
+                        r.ep_of_rank, r.makespan)
+                    row["fabric_ratio"] = round(cc["ratio"], 3)
+                rows.append(row)
+    return rows

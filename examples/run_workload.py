@@ -1,0 +1,90 @@
+"""Run a closed-loop HPC workload on a simulated fabric and print the
+JCT report (DESIGN.md §7).
+
+  PYTHONPATH=src python examples/run_workload.py \\
+      [--topo sf|df|ft3] [--workload ring_all_reduce|recdbl_all_reduce|
+       all_to_all|stencil|graph_scatter] [--ranks 32] [--flits 8]
+      [--mode min] [--placement linear]
+"""
+
+import argparse
+
+from repro.core import build_slimfly
+from repro.core.topologies import build_dragonfly, build_fattree3
+from repro.sim import SimTables
+from repro.sim.workloads import (
+    PLACEMENTS,
+    WorkloadSimConfig,
+    fabric_crosscheck,
+    make_workload,
+    run_workload,
+    summarize,
+)
+
+
+def build_tables(topo: str, q: int) -> SimTables:
+    if topo == "sf":
+        return SimTables.build(build_slimfly(q))
+    if topo == "df":
+        return SimTables.build(build_dragonfly(h=2))
+    return SimTables.build(build_fattree3(p=4), ecmp=True)
+
+
+def build_workload(kind: str, ranks: int, flits: int, iters: int):
+    if kind == "stencil":
+        # largest gx <= sqrt(ranks) with gx, ranks/gx both >= 2, so the
+        # grid uses EXACTLY the requested rank count
+        gx = max((d for d in range(2, int(ranks ** 0.5) + 1)
+                  if ranks % d == 0), default=0)
+        if gx == 0:
+            raise SystemExit(
+                f"--workload stencil needs --ranks with a gx*gy "
+                f"factorization, both factors >= 2 (got {ranks})")
+        return make_workload(kind, dims=(gx, ranks // gx),
+                             halo_flits=flits, iters=iters)
+    if kind == "graph_scatter":
+        return make_workload(kind, n_ranks=ranks, flits=flits, iters=iters)
+    if kind == "ring_all_reduce":
+        return make_workload(kind, n_ranks=ranks, chunk_flits=flits)
+    if kind == "recdbl_all_reduce":
+        return make_workload(kind, n_ranks=ranks, size_flits=flits)
+    return make_workload(kind, n_ranks=ranks, flits_per_pair=flits)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--topo", default="sf", choices=["sf", "df", "ft3"])
+    ap.add_argument("--q", type=int, default=5)
+    ap.add_argument("--workload", default="ring_all_reduce",
+                    choices=["ring_all_reduce", "recdbl_all_reduce",
+                             "all_to_all", "stencil", "graph_scatter"])
+    ap.add_argument("--ranks", type=int, default=32)
+    ap.add_argument("--flits", type=int, default=8,
+                    help="per-message flits (chunk/halo/pair size)")
+    ap.add_argument("--iters", type=int, default=2)
+    ap.add_argument("--mode", default="min",
+                    choices=["min", "val", "ugal_l", "ugal_g", "ecmp"])
+    ap.add_argument("--placement", default="linear", choices=PLACEMENTS)
+    args = ap.parse_args()
+
+    tables = build_tables(args.topo, args.q)
+    wl = build_workload(args.workload, args.ranks, args.flits, args.iters)
+    print(f"{args.topo}: {tables.n_routers} routers, "
+          f"{tables.n_endpoints} endpoints; workload {wl.name} "
+          f"({wl.n_messages} messages, {wl.total_flits} flits)")
+
+    cfg = WorkloadSimConfig(mode=args.mode, placement=args.placement)
+    result = run_workload(tables, wl, cfg)
+    print(summarize(wl, result).table())
+
+    if args.workload == "ring_all_reduce" and result.completed:
+        cc = fabric_crosscheck(tables.topo, "all_reduce",
+                               args.ranks * args.flits,
+                               result.ep_of_rank, result.makespan)
+        print(f"FabricModel ring estimate: {cc['estimate_cycles']:.0f} "
+              f"cycles (measured/est = {cc['ratio']:.2f}, "
+              f"model best = {cc['best_algorithm']})")
+
+
+if __name__ == "__main__":
+    main()

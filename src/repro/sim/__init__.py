@@ -1,13 +1,17 @@
-"""Cycle-based single-flit network simulator in JAX (paper §V).
+"""Cycle-based flit network simulator in JAX (paper §V).
 
-- tables:  topology -> dense JAX routing/port tables
-- traffic: §V traffic patterns (uniform, shuffle, bit ops, shift,
-           SF worst-case, DF worst-case)
-- engine:  input-queued router model, lax.scan over cycles
+- tables:    topology -> dense JAX routing/port tables
+- traffic:   §V traffic patterns (uniform, shuffle, bit ops, shift,
+             SF worst-case, DF worst-case)
+- engine:    input-queued router model (SwitchCore), lax.scan over
+             cycles; open-loop Bernoulli `simulate`
+- workloads: closed-loop message-DAG engine on the same SwitchCore
+             (collectives / stencil / graph JCT runs, DESIGN.md §7)
 """
 
-from .engine import SimConfig, SimResult, simulate
+from .engine import SimConfig, SimResult, SwitchCore, simulate
 from .tables import SimTables
 from .traffic import make_traffic
 
-__all__ = ["SimConfig", "SimResult", "simulate", "SimTables", "make_traffic"]
+__all__ = ["SimConfig", "SimResult", "SwitchCore", "simulate", "SimTables",
+           "make_traffic"]

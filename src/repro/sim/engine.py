@@ -1,5 +1,5 @@
-"""Cycle-based single-flit network simulator (paper §V), fully vectorized
-in JAX with a lax.scan over cycles.
+"""Cycle-based flit network simulator (paper §V), fully vectorized in
+JAX with a lax.scan over cycles.
 
 Model (faithful to the paper's setup):
   - single-flit packets, Bernoulli injection (§V), input-queued routers;
@@ -18,15 +18,32 @@ Model (faithful to the paper's setup):
   - routing modes: 'min', 'val', 'ugal_l', 'ugal_g' (§IV), and 'ecmp'
     (adaptive equal-cost next-hop — the FT-3 ANCA stand-in).
 
-State layout: packet records are int32 [..., 5] = (dst_router, inter,
-inject_cycle, hops, phase).  Network queues [N, P, V, Qn, 5] as circular
-FIFOs with (head, count); source queues [N_ep, Qs, 5].
+The switch itself (credit view, per-flit route choice, W-round
+allocation, window compaction) lives in :class:`SwitchCore` and is
+shared between two engines that differ only in how source queues fill
+and in what they fold over ejection grants:
+
+  - `simulate` (this module): open-loop Bernoulli injection, the §V
+    latency/throughput methodology;
+  - `repro.sim.workloads.closed_loop`: dependency-triggered multi-flit
+    message injection for closed-loop workload (JCT) runs; its packet
+    records carry a sixth MSG field that the core passes through
+    untouched.
+
+State layout: packet records are int32 [..., F] with fields (dst_router,
+inter, inject_cycle, hops, phase[, msg]).  Network queues [N, P, V, Qn,
+F] as circular FIFOs with (head, count); source queues [N_ep, Qs, F].
+
+`simulate` compiles one `(rate, key) ->` scan per (tables, traffic,
+static-config) signature and caches it, so a load sweep (fig6) traces
+and compiles the network exactly once — injection rate and PRNG seed are
+traced operands, not Python constants baked into the graph.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -35,9 +52,9 @@ import numpy as np
 from .tables import SimTables
 from .traffic import Traffic
 
-__all__ = ["SimConfig", "SimResult", "simulate"]
+__all__ = ["SimConfig", "SimResult", "SwitchCore", "simulate"]
 
-DST, INTER, TIME, HOPS, PHASE = range(5)
+DST, INTER, TIME, HOPS, PHASE, MSG = range(6)
 BIG = jnp.int32(1 << 30)
 
 
@@ -53,6 +70,11 @@ class SimConfig:
     n_val_candidates: int = 4         # §IV-C: 4 works best
     lookahead: int = 4                # allocation window (HOL mitigation)
     seed: int = 0
+
+    def static_key(self) -> tuple:
+        """Fields that shape the compiled graph (rate/seed are traced)."""
+        return (self.cycles, self.vcs, self.q_net, self.q_src, self.mode,
+                self.n_val_candidates, self.lookahead)
 
 
 @dataclasses.dataclass
@@ -79,42 +101,95 @@ class SimResult:
         return self.src_occupancy > 0.5 * 64 or self.dropped_at_source > 0
 
 
-def simulate(tables: SimTables, traffic: Traffic, cfg: SimConfig) -> SimResult:
-    N, P, V = tables.n_routers, tables.P, cfg.vcs
-    Qn, Qs = cfg.q_net, cfg.q_src
-    n_ep = tables.n_endpoints
-    p = tables.p
-    W = cfg.lookahead
+class SwitchCore:
+    """Shared input-queued switch pipeline for one (tables, config).
 
-    nbr = jnp.asarray(tables.nbr)
-    rev_port = jnp.asarray(tables.rev_port)
-    port_toward = jnp.asarray(tables.port_toward)
-    dist = jnp.asarray(tables.dist.astype(np.int32))
-    ep_router = jnp.asarray(tables.ep_router)
-    active = jnp.asarray(traffic.active)
-    n_active = int(traffic.active.sum())
-    has_ecmp = tables.ecmp_ports is not None
-    ecmp_ports = jnp.asarray(tables.ecmp_ports) if has_ecmp else None
+    Owns the device-resident routing tables and implements the four
+    engine-independent stages of a cycle: credit-view `occupancy`,
+    per-flit `route_decision`, and `alloc` (W rounds of
+    rotating-priority matching with immediate arrivals, followed by
+    window compaction and dequeues).  Engines inject into the source
+    queues themselves and pass an `eject_fold(acc, grant_ej, req_pkt,
+    cycle)` callback so open-loop stats (delivered/latency) and
+    closed-loop stats (per-message flit counts) use the same matching
+    machinery.  `n_fields` is the packet record width: 5 for open-loop,
+    6 (with a trailing MSG id) for closed-loop; the core only
+    interprets fields 0..4 and carries the rest verbatim.
+    """
 
-    # endpoint-router blocks for ejection ranking: endpoints are sorted by
-    # router and each endpoint-router has exactly p endpoints.
-    ep_block_router = jnp.asarray(tables.ep_router[::p])      # [N_epr]
-    n_epr = n_ep // p
+    def __init__(self, tables: SimTables, cfg: SimConfig,
+                 n_fields: int = 5):
+        self.tables = tables
+        self.F = n_fields
+        N, P, V = tables.n_routers, tables.P, cfg.vcs
+        self.N, self.P, self.V = N, P, V
+        self.Qn, self.Qs = cfg.q_net, cfg.q_src
+        self.n_ep = tables.n_endpoints
+        self.p = tables.p
+        self.W = cfg.lookahead
+        self.mode = cfg.mode
+        self.C = cfg.n_val_candidates
 
-    NQ = N * P * V
-    R = NQ + n_ep
-    eids = jnp.arange(n_ep)
-    routers_n = jnp.arange(N)[:, None, None]                  # [N,1,1]
-    req_r_const = jnp.concatenate(
-        [jnp.broadcast_to(routers_n, (N, P, V)).reshape(-1), ep_router])
+        self.nbr = jnp.asarray(tables.nbr)
+        self.rev_port = jnp.asarray(tables.rev_port)
+        self.port_toward = jnp.asarray(tables.port_toward)
+        self.dist = jnp.asarray(tables.dist.astype(np.int32))
+        self.ep_router = jnp.asarray(tables.ep_router)
+        self.has_ecmp = tables.ecmp_ports is not None
+        self.ecmp_ports = (jnp.asarray(tables.ecmp_ports)
+                           if self.has_ecmp else None)
 
-    rate = cfg.injection_rate
-    mode = cfg.mode
-    C = cfg.n_val_candidates
+        # endpoint-router blocks for ejection ranking: endpoints are
+        # sorted by router and each endpoint-router has exactly p
+        # endpoints.
+        self.ep_block_router = jnp.asarray(tables.ep_router[::self.p])
+        self.n_epr = self.n_ep // self.p
 
-    def route_decision(dst_r, occ, key):
+        self.NQ = N * P * V
+        self.R = self.NQ + self.n_ep
+        self.eids = jnp.arange(self.n_ep)
+        self.routers_n = jnp.arange(N)[:, None, None]          # [N,1,1]
+        self.req_r_const = jnp.concatenate(
+            [jnp.broadcast_to(self.routers_n, (N, P, V)).reshape(-1),
+             self.ep_router])
+
+    # -- queue state ---------------------------------------------------------
+    def init_queues(self) -> tuple:
+        """(nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count) zeros."""
+        N, P, V, Qn, Qs, F = (self.N, self.P, self.V, self.Qn, self.Qs,
+                              self.F)
+        return (jnp.zeros((N, P, V, Qn, F), jnp.int32),
+                jnp.zeros((N, P, V), jnp.int32),
+                jnp.zeros((N, P, V), jnp.int32),
+                jnp.zeros((self.n_ep, Qs, F), jnp.int32),
+                jnp.zeros((self.n_ep,), jnp.int32),
+                jnp.zeros((self.n_ep,), jnp.int32))
+
+    def occupancy(self, nq_count):
+        """Credit view: occ[r, o] = downstream input-queue depth."""
+        safe_nbr = jnp.maximum(self.nbr, 0)
+        safe_rev = jnp.maximum(self.rev_port, 0)
+        occ = nq_count[safe_nbr, safe_rev, :].sum(-1)          # [N, P]
+        return jnp.where(self.nbr >= 0, occ, BIG)
+
+    def inject(self, sq_pkt, sq_head, sq_count, want, new_pkt):
+        """Masked tail enqueue into the per-endpoint source FIFOs.
+
+        `want` must already account for backpressure (`sq_count < Qs`);
+        both engines share these mechanics by construction.
+        """
+        tail = (sq_head + sq_count) % self.Qs
+        cur = sq_pkt[self.eids, tail]
+        sq_pkt = sq_pkt.at[self.eids, tail].set(
+            jnp.where(want[:, None], new_pkt, cur))
+        return sq_pkt, sq_count + want.astype(jnp.int32)
+
+    # -- routing -------------------------------------------------------------
+    def route_decision(self, dst_r, occ, key):
         """Per-endpoint injection-time path choice -> (inter, phase)."""
-        src_r = ep_router
+        mode, C, N, n_ep = self.mode, self.C, self.N, self.n_ep
+        src_r = self.ep_router
+        dist, port_toward, nbr = self.dist, self.port_toward, self.nbr
         if mode in ("min", "ecmp"):
             return dst_r, jnp.ones_like(dst_r)
         if mode == "val":
@@ -159,78 +234,65 @@ def simulate(tables: SimTables, traffic: Traffic, cfg: SimConfig) -> SimResult:
         phase = (best == 0).astype(jnp.int32)                     # MIN: phase 1
         return inter, phase
 
-    def step(carry, cycle):
-        (nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count, key) = carry
-        key, k_inj, k_dst, k_rt = jax.random.split(key, 4)
+    # -- allocation ----------------------------------------------------------
+    def _desires(self, pkt, router, occ):
+        tgt = jnp.where(pkt[..., PHASE] == 1, pkt[..., DST],
+                        pkt[..., INTER])
+        eject = (pkt[..., DST] == router) & (pkt[..., PHASE] == 1)
+        if self.has_ecmp:
+            opts = self.ecmp_ports[router, tgt]                   # [..., M]
+            r_b = jnp.broadcast_to(router[..., None], opts.shape)
+            o_occ = jnp.where(opts >= 0,
+                              occ[r_b, jnp.maximum(opts, 0)], BIG)
+            pick = jnp.argmin(o_occ, axis=-1)
+            out_port = jnp.take_along_axis(opts, pick[..., None],
+                                           -1)[..., 0]
+            out_port = jnp.where(eject, -1, out_port)
+        else:
+            out_port = self.port_toward[router, tgt]
+        out_vc = jnp.minimum(pkt[..., HOPS], self.V - 1)
+        return out_port, out_vc, eject
 
-        # ---- channel occupancy (credit view): occ[r, o] of downstream queue
-        safe_nbr = jnp.maximum(nbr, 0)
-        safe_rev = jnp.maximum(rev_port, 0)
-        occ = nq_count[safe_nbr, safe_rev, :].sum(-1)             # [N, P]
-        occ = jnp.where(nbr >= 0, occ, BIG)
+    def alloc(self, nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count,
+              occ, cycle, eject_fold: Callable, eject_acc):
+        """One cycle of W-round switch allocation + compaction.
 
-        # ---- injection ------------------------------------------------
-        coin = jax.random.bernoulli(k_inj, rate, (n_ep,)) & active
-        want = coin & (sq_count < Qs)
-        dropped = (coin & (sq_count >= Qs)).sum()
-        dst_ep = traffic.sample(k_dst)
-        dst_r = ep_router[dst_ep]
-        inter, phase = route_decision(dst_r, occ, k_rt)
-        new_pkt = jnp.stack(
-            [dst_r, inter, jnp.full((n_ep,), cycle, jnp.int32),
-             jnp.zeros((n_ep,), jnp.int32), phase], axis=-1)
-        tail = (sq_head + sq_count) % Qs
-        cur = sq_pkt[eids, tail]
-        sq_pkt = sq_pkt.at[eids, tail].set(
-            jnp.where(want[:, None], new_pkt, cur))
-        sq_count = sq_count + want.astype(jnp.int32)
-        injected = want.sum()
-
-        # ---- W-round switch allocation over the lookahead window --------
-        def desires(pkt, router):
-            tgt = jnp.where(pkt[..., PHASE] == 1, pkt[..., DST],
-                            pkt[..., INTER])
-            eject = (pkt[..., DST] == router) & (pkt[..., PHASE] == 1)
-            if has_ecmp:
-                opts = ecmp_ports[router, tgt]                    # [..., M]
-                r_b = jnp.broadcast_to(router[..., None], opts.shape)
-                o_occ = jnp.where(opts >= 0,
-                                  occ[r_b, jnp.maximum(opts, 0)], BIG)
-                pick = jnp.argmin(o_occ, axis=-1)
-                out_port = jnp.take_along_axis(opts, pick[..., None],
-                                               -1)[..., 0]
-                out_port = jnp.where(eject, -1, out_port)
-            else:
-                out_port = port_toward[router, tgt]
-            out_vc = jnp.minimum(pkt[..., HOPS], V - 1)
-            return out_port, out_vc, eject
+        Returns the six queue arrays plus the folded ejection
+        accumulator.  `eject_fold(acc, grant_ej [R] bool, req_pkt
+        [R, F], cycle)` is called once per round with that round's
+        ejection grants.
+        """
+        N, P, V, Qn, Qs, F, W = (self.N, self.P, self.V, self.Qn,
+                                 self.Qs, self.F, self.W)
+        NQ, R, n_ep, p, n_epr = self.NQ, self.R, self.n_ep, self.p, self.n_epr
+        nbr, rev_port = self.nbr, self.rev_port
+        eids, ep_router = self.eids, self.ep_router
+        ep_block_router, req_r_const = self.ep_block_router, self.req_r_const
 
         queue_granted = jnp.zeros((R,), bool)
         grant_slot = jnp.full((R,), -1, jnp.int32)
         chan_taken = jnp.zeros((N * P,), bool)
         ej_budget = jnp.full((N,), p, jnp.int32)
-        delivered = jnp.int32(0)
-        lat_sum = jnp.float32(0.0)
         pending_cnt = nq_count  # grows with this cycle's arrivals
 
         for w in range(W):
             nh_w = jnp.take_along_axis(
                 nq_pkt, ((nq_head + w) % Qn)[:, :, :, None, None],
-                axis=3)[:, :, :, 0]                                # [N,P,V,5]
+                axis=3)[:, :, :, 0]                                # [N,P,V,F]
             n_valid = (nq_count > w) & (nbr[:, :, None] >= 0)
             sh_w = sq_pkt[eids, (sq_head + w) % Qs]
             s_valid = sq_count > w
 
-            n_out, n_vc, n_ej = desires(
-                nh_w, jnp.broadcast_to(routers_n, (N, P, V)))
-            s_out, s_vc, s_ej = desires(sh_w, ep_router)
+            n_out, n_vc, n_ej = self._desires(
+                nh_w, jnp.broadcast_to(self.routers_n, (N, P, V)), occ)
+            s_out, s_vc, s_ej = self._desires(sh_w, ep_router, occ)
 
             req_out = jnp.concatenate([n_out.reshape(-1), s_out])
             req_vc = jnp.concatenate([n_vc.reshape(-1), s_vc])
             req_ej = jnp.concatenate([n_ej.reshape(-1), s_ej])
             req_valid = (jnp.concatenate([n_valid.reshape(-1), s_valid])
                          & ~queue_granted)
-            req_pkt = jnp.concatenate([nh_w.reshape(-1, 5), sh_w], axis=0)
+            req_pkt = jnp.concatenate([nh_w.reshape(-1, F), sh_w], axis=0)
 
             # --- ejection grants against remaining per-router budget
             ej = req_valid & req_ej
@@ -290,11 +352,8 @@ def simulate(tables: SimTables, traffic: Traffic, cfg: SimConfig) -> SimResult:
             pending_cnt = pending_cnt.at[a_r, a_p, req_vc].add(
                 winner.astype(jnp.int32), mode="drop")
 
-            # --- stats
-            delivered = delivered + grant_ej.sum().astype(jnp.int32)
-            lat_sum = lat_sum + jnp.where(
-                grant_ej, cycle - req_pkt[:, TIME] + 1, 0
-            ).sum().astype(jnp.float32)
+            # --- engine-specific ejection stats
+            eject_acc = eject_fold(eject_acc, grant_ej, req_pkt, cycle)
 
         # ---- dequeues: remove packet at offset grant_slot (shift-up) -----
         g_net = grant_slot[:NQ].reshape(N, P, V)
@@ -312,8 +371,8 @@ def simulate(tables: SimTables, traffic: Traffic, cfg: SimConfig) -> SimResult:
             nq_pkt = jax.vmap(
                 lambda q, i, v: q.at[i].set(v),
                 in_axes=(0, 0, 0))(
-                    nq_pkt.reshape(NQ, Qn, 5), dst_idx.reshape(NQ),
-                    newv.reshape(NQ, 5)).reshape(N, P, V, Qn, 5)
+                    nq_pkt.reshape(NQ, Qn, F), dst_idx.reshape(NQ),
+                    newv.reshape(NQ, F)).reshape(N, P, V, Qn, F)
             m_src = (g_src >= j)
             s_from = sq_pkt[eids, (sq_head + j - 1) % Qs]
             s_didx = (sq_head + j) % Qs
@@ -328,26 +387,95 @@ def simulate(tables: SimTables, traffic: Traffic, cfg: SimConfig) -> SimResult:
         sq_head = (sq_head + deq_src) % Qs
         sq_count = sq_count - deq_src
 
-        in_flight = (nq_count.sum() + sq_count.sum()).astype(jnp.int32)
-        stats = (injected.astype(jnp.int32), delivered,
-                 lat_sum, sq_count.sum().astype(jnp.int32),
-                 dropped.astype(jnp.int32), in_flight)
         return (nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count,
-                key), stats
+                eject_acc)
 
-    # ---- initial state -----------------------------------------------------
-    nq_pkt = jnp.zeros((N, P, V, Qn, 5), jnp.int32)
-    nq_head = jnp.zeros((N, P, V), jnp.int32)
-    nq_count = jnp.zeros((N, P, V), jnp.int32)
-    sq_pkt = jnp.zeros((n_ep, Qs, 5), jnp.int32)
-    sq_head = jnp.zeros((n_ep,), jnp.int32)
-    sq_count = jnp.zeros((n_ep,), jnp.int32)
-    key = jax.random.PRNGKey(cfg.seed)
 
-    carry = (nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count, key)
-    cycles = jnp.arange(cfg.cycles, dtype=jnp.int32)
-    carry, (inj, dlv, lat, occ_s, drop, infl) = jax.lax.scan(step, carry,
-                                                             cycles)
+def _open_loop_fold(acc, grant_ej, req_pkt, cycle):
+    """Open-loop ejection stats: delivered count + latency sum."""
+    delivered, lat_sum = acc
+    delivered = delivered + grant_ej.sum().astype(jnp.int32)
+    lat_sum = lat_sum + jnp.where(
+        grant_ej, cycle - req_pkt[:, TIME] + 1, 0).sum().astype(jnp.float32)
+    return delivered, lat_sum
+
+
+# (tables, traffic, static-config) -> compiled (rate, key) -> per-cycle
+# stats.  Values pin the tables/traffic objects so the id() keys cannot
+# be silently reused by the allocator; the FIFO bound keeps a long-lived
+# process from accumulating compiled executables without limit.
+_OPEN_LOOP_CACHE: dict = {}
+_CACHE_MAX = 32
+
+
+def _cache_put(cache: dict, key, value) -> None:
+    while len(cache) >= _CACHE_MAX:
+        cache.pop(next(iter(cache)))
+    cache[key] = value
+
+
+def _open_loop_runner(tables: SimTables, traffic: Traffic, cfg: SimConfig):
+    key = (id(tables), id(traffic), cfg.static_key())
+    hit = _OPEN_LOOP_CACHE.get(key)
+    if hit is not None and hit[0] is tables and hit[1] is traffic:
+        return hit[2]
+
+    core = SwitchCore(tables, cfg, n_fields=5)
+    active = jnp.asarray(traffic.active)
+    n_ep, Qs = core.n_ep, core.Qs
+    sample = traffic.sample
+
+    def run(rate, key0):
+        def step(carry, cycle):
+            (nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count,
+             key) = carry
+            key, k_inj, k_dst, k_rt = jax.random.split(key, 4)
+
+            occ = core.occupancy(nq_count)
+
+            # ---- injection ------------------------------------------------
+            coin = jax.random.bernoulli(k_inj, rate, (n_ep,)) & active
+            want = coin & (sq_count < Qs)
+            dropped = (coin & (sq_count >= Qs)).sum()
+            dst_ep = sample(k_dst)
+            dst_r = core.ep_router[dst_ep]
+            inter, phase = core.route_decision(dst_r, occ, k_rt)
+            new_pkt = jnp.stack(
+                [dst_r, inter, jnp.full((n_ep,), cycle, jnp.int32),
+                 jnp.zeros((n_ep,), jnp.int32), phase], axis=-1)
+            sq_pkt, sq_count = core.inject(sq_pkt, sq_head, sq_count,
+                                           want, new_pkt)
+            injected = want.sum()
+
+            # ---- shared switch pipeline -----------------------------------
+            (nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count,
+             (delivered, lat_sum)) = core.alloc(
+                 nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count,
+                 occ, cycle, _open_loop_fold,
+                 (jnp.int32(0), jnp.float32(0.0)))
+
+            in_flight = (nq_count.sum() + sq_count.sum()).astype(jnp.int32)
+            stats = (injected.astype(jnp.int32), delivered,
+                     lat_sum, sq_count.sum().astype(jnp.int32),
+                     dropped.astype(jnp.int32), in_flight)
+            return (nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count,
+                    key), stats
+
+        carry = core.init_queues() + (key0,)
+        cycles = jnp.arange(cfg.cycles, dtype=jnp.int32)
+        _, stats = jax.lax.scan(step, carry, cycles)
+        return stats
+
+    fn = jax.jit(run)
+    _cache_put(_OPEN_LOOP_CACHE, key, (tables, traffic, fn))
+    return fn
+
+
+def simulate(tables: SimTables, traffic: Traffic, cfg: SimConfig) -> SimResult:
+    n_active = int(traffic.active.sum())
+    run = _open_loop_runner(tables, traffic, cfg)
+    inj, dlv, lat, occ_s, drop, infl = run(
+        jnp.float32(cfg.injection_rate), jax.random.PRNGKey(cfg.seed))
 
     inj = np.asarray(inj, dtype=np.int64)
     dlv = np.asarray(dlv, dtype=np.int64)
@@ -356,6 +484,7 @@ def simulate(tables: SimTables, traffic: Traffic, cfg: SimConfig) -> SimResult:
     drop = np.asarray(drop, dtype=np.int64)
     infl = np.asarray(infl, dtype=np.int64)
 
+    n_ep = tables.n_endpoints
     w = cfg.warmup
     meas = slice(w, cfg.cycles)
     m_cycles = cfg.cycles - w

@@ -77,7 +77,7 @@ def make_traffic(tables: SimTables, pattern: str, seed: int = 0) -> Traffic:
         return Traffic("shift", active, sample)
 
     if pattern == "worstcase_sf":
-        return _worstcase_sf(tables)
+        return _worstcase_sf(tables, seed)
 
     if pattern == "worstcase_df":
         return _worstcase_df(tables)
@@ -85,13 +85,15 @@ def make_traffic(tables: SimTables, pattern: str, seed: int = 0) -> Traffic:
     raise ValueError(f"unknown traffic pattern {pattern!r}")
 
 
-def _worstcase_sf(tables: SimTables) -> Traffic:
+def _worstcase_sf(tables: SimTables, seed: int = 0) -> Traffic:
     """§V-C: maximal load on one link (Rx -> Ry).
 
     A = routers whose 2-hop MIN path to Rx goes via Ry  (their endpoints
         send to Rx's endpoints),
     B = routers whose 2-hop MIN path to Ry goes via Rx  (send to Ry's),
     and Rx's endpoints send back to A's, Ry's to B's ("send and receive").
+    `seed` drives the candidate-link sampling (the link search is
+    sampled, not exhaustive, on large networks).
     """
     dist, pt, nbr = tables.dist, tables.port_toward, tables.nbr
     n = tables.n_routers
@@ -101,7 +103,7 @@ def _worstcase_sf(tables: SimTables) -> Traffic:
 
     # choose the link maximising |A| + |B|
     best, best_ab = None, -1
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     cand_links = [(rx, int(v)) for rx in rng.choice(n, size=min(n, 64),
                                                     replace=False)
                   for v in nbr[rx][nbr[rx] >= 0][:8]]
@@ -117,8 +119,7 @@ def _worstcase_sf(tables: SimTables) -> Traffic:
     rx, ry, A, B = best
 
     eps_of = lambda r: np.nonzero(ep_router == r)[0]
-    dst_of = ids = np.arange(n_ep)
-    dst_of = ids.copy()
+    dst_of = np.arange(n_ep)
     active = np.zeros(n_ep, dtype=bool)
 
     def assign(src_routers, dst_router):

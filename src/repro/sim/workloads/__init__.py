@@ -1,0 +1,47 @@
+"""Closed-loop HPC workload engine on the flit simulator (DESIGN.md §7).
+
+- ir:          message-DAG workload IR + builders (collectives, stencil,
+               graph scatter)
+- mapping:     logical rank -> endpoint placement schemes
+- closed_loop: dependency-triggered flit injection on the shared
+               SwitchCore; chunked lax.scan with early exit
+- report:      makespan / per-phase latency / bandwidth + FabricModel
+               cross-validation
+"""
+
+from .closed_loop import WorkloadResult, WorkloadSimConfig, run_workload
+from .ir import (
+    Workload,
+    all_to_all,
+    graph_scatter,
+    make_workload,
+    recursive_doubling_all_reduce,
+    ring_all_reduce,
+    stencil,
+)
+from .mapping import PLACEMENTS, place_ranks
+from .report import (
+    WorkloadReport,
+    cycle_fabric_model,
+    fabric_crosscheck,
+    summarize,
+)
+
+__all__ = [
+    "Workload",
+    "ring_all_reduce",
+    "recursive_doubling_all_reduce",
+    "all_to_all",
+    "stencil",
+    "graph_scatter",
+    "make_workload",
+    "PLACEMENTS",
+    "place_ranks",
+    "WorkloadSimConfig",
+    "WorkloadResult",
+    "run_workload",
+    "WorkloadReport",
+    "summarize",
+    "cycle_fabric_model",
+    "fabric_crosscheck",
+]

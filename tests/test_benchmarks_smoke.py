@@ -27,3 +27,14 @@ def test_benchmark_fast_mode(modname, monkeypatch):
         derived = row.get("derived", 0)
         assert isinstance(derived, (int, float)), (modname, row)
         assert math.isfinite(derived), (modname, row)
+    if modname == "workloads_jct":
+        # closed-loop JCT rows must cover all three fabrics, every
+        # workload must drain its DAG, and the all-reduce rows carry
+        # the FabricModel cross-check ratio
+        names = " ".join(row["name"] for row in rows)
+        for tag in ("/sf/", "/df/", "/ft3/"):
+            assert tag in names, names
+        assert all(row["completed"] for row in rows), rows
+        ratios = [row["fabric_ratio"] for row in rows
+                  if "fabric_ratio" in row]
+        assert ratios and all(0.2 < r < 5.0 for r in ratios), ratios

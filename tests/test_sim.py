@@ -2,6 +2,8 @@
 traffic patterns, and qualitative reproduction of the paper's Fig 6
 orderings (full curves live in benchmarks/fig6_perf.py)."""
 
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -170,3 +172,33 @@ def test_deterministic_given_seed(sf5_tables, uni5):
     r2 = simulate(sf5_tables, uni5, cfg)
     assert r1.delivered == r2.delivered
     assert r1.avg_latency == r2.avg_latency
+
+
+def test_worstcase_seed_threaded(sf5_tables):
+    """make_traffic threads `seed` into the worst-case link search (it
+    used to be silently ignored); any seed yields a valid adversarial
+    pattern and seed=0 stays deterministic."""
+    t0a = make_traffic(sf5_tables, "worstcase_sf", seed=0)
+    t0b = make_traffic(sf5_tables, "worstcase_sf", seed=0)
+    np.testing.assert_array_equal(t0a.active, t0b.active)
+    for seed in (0, 7):
+        t = make_traffic(sf5_tables, "worstcase_sf", seed=seed)
+        assert t.active.sum() > 0
+        dst = np.asarray(t.sample(None))
+        # active senders target other endpoints
+        assert (dst[t.active] != np.arange(len(t.active))[t.active]).all()
+
+
+def test_load_sweep_compiles_once(sf5_tables, uni5):
+    """Injection rate and seed are traced operands: a load sweep over
+    one (tables, traffic, static-config) reuses a single compiled scan
+    instead of retracing per rate point (fig6 perf satellite)."""
+    from repro.sim import engine
+
+    engine._OPEN_LOOP_CACHE.clear()
+    cfg0 = SimConfig(injection_rate=0.1, cycles=120, warmup=40, mode="min")
+    for rate, seed in [(0.1, 0), (0.4, 1), (0.7, 2)]:
+        r = simulate(sf5_tables, uni5, dataclasses.replace(
+            cfg0, injection_rate=rate, seed=seed))
+        assert r.accepted_load > 0
+    assert len(engine._OPEN_LOOP_CACHE) == 1

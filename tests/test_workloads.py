@@ -1,0 +1,211 @@
+"""Closed-loop workload engine (DESIGN.md §7): IR builders, rank
+placement, deadlock freedom of the routes the engine uses, DAG
+conservation (every message delivered exactly once, finite makespan),
+determinism, and the FabricModel cross-validation the acceptance
+criterion pins at 2x."""
+
+import numpy as np
+import pytest
+
+from repro.core import build_slimfly
+from repro.core.routing import build_routing, is_deadlock_free, valiant_path
+from repro.sim import SimTables
+from repro.sim.workloads import (
+    PLACEMENTS,
+    WorkloadSimConfig,
+    all_to_all,
+    fabric_crosscheck,
+    graph_scatter,
+    place_ranks,
+    recursive_doubling_all_reduce,
+    ring_all_reduce,
+    run_workload,
+    stencil,
+)
+
+RING_K, RING_CHUNK = 16, 8
+
+
+@pytest.fixture(scope="module")
+def sf5_tables():
+    return SimTables.build(build_slimfly(5))
+
+
+@pytest.fixture(scope="module")
+def ring_run(sf5_tables):
+    """One ring all-reduce JCT run shared by the sim-level tests."""
+    wl = ring_all_reduce(RING_K, RING_CHUNK)
+    cfg = WorkloadSimConfig(mode="min", chunk=128, seed=0)
+    return wl, cfg, run_workload(sf5_tables, wl, cfg)
+
+
+# ---------------------------------------------------------------------------
+# IR builders
+# ---------------------------------------------------------------------------
+
+def _assert_acyclic_kahn(wl):
+    """Independent acyclicity check (Kahn), not the id-order shortcut."""
+    m = wl.n_messages
+    indeg = np.array([len(d) for d in wl.deps])
+    succs = [[] for _ in range(m)]
+    for i, d in enumerate(wl.deps):
+        for j in d:
+            succs[j].append(i)
+    stack = list(np.nonzero(indeg == 0)[0])
+    seen = 0
+    while stack:
+        v = stack.pop()
+        seen += 1
+        for w in succs[v]:
+            indeg[w] -= 1
+            if indeg[w] == 0:
+                stack.append(w)
+    assert seen == m, "dependency cycle"
+
+
+@pytest.mark.parametrize("wl_fn", [
+    lambda: ring_all_reduce(8, 4),
+    lambda: recursive_doubling_all_reduce(8, 16),
+    lambda: all_to_all(6, 3),
+    lambda: stencil((4, 4), 8, iters=3),
+    lambda: stencil((3, 3, 2), 8, iters=2),
+    lambda: graph_scatter(24, 8, iters=2, seed=1),
+])
+def test_builders_valid_dags(wl_fn):
+    wl = wl_fn()
+    wl.validate()
+    _assert_acyclic_kahn(wl)
+    dm = wl.dep_matrix()
+    assert dm.shape[0] == wl.n_messages and dm.shape[1] >= 1
+    assert (wl.size > 0).all() and (wl.src != wl.dst).all()
+
+
+def test_ring_all_reduce_shape():
+    k = 8
+    wl = ring_all_reduce(k, 4)
+    assert wl.n_messages == 2 * (k - 1) * k
+    # each rank sends exactly 2(k-1) chunks; phases split at step k-1
+    counts = np.bincount(wl.src, minlength=k)
+    assert (counts == 2 * (k - 1)).all()
+    assert set(np.unique(wl.phase)) == {0, 1}
+
+
+def test_graph_scatter_degree_skew():
+    wl = graph_scatter(64, 4, iters=1, skew=1.3, seed=3)
+    deg = np.bincount(wl.src, minlength=64)
+    # Zipf out-degrees: some fan-out well above the median hub-style
+    assert deg.max() >= 4 * max(1, int(np.median(deg)))
+    assert deg.min() >= 1
+
+
+# ---------------------------------------------------------------------------
+# placement
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", PLACEMENTS)
+def test_placement_injective(sf5_tables, scheme):
+    eps = place_ranks(sf5_tables, 48, scheme, seed=2)
+    assert len(np.unique(eps)) == 48
+    assert eps.min() >= 0 and eps.max() < sf5_tables.n_endpoints
+
+
+def test_placement_blocked_groups_by_router(sf5_tables):
+    p = sf5_tables.p
+    eps = place_ranks(sf5_tables, 4 * p, "blocked")
+    routers = sf5_tables.ep_router[eps]
+    # consecutive p-blocks of ranks land on a single router each
+    for b in range(4):
+        assert len(set(routers[b * p:(b + 1) * p])) == 1
+    assert len(set(routers)) == 4
+
+
+def test_placement_spread_distinct_routers(sf5_tables):
+    n_epr = sf5_tables.n_endpoints // sf5_tables.p
+    eps = place_ranks(sf5_tables, n_epr, "spread")
+    assert len(set(sf5_tables.ep_router[eps])) == n_epr
+
+
+# ---------------------------------------------------------------------------
+# deadlock freedom of the routes the engine uses (satellite)
+# ---------------------------------------------------------------------------
+
+def test_workload_routes_deadlock_free(sf5_tables):
+    """MIN and VAL path sets for the messages the engine injects on SF
+    q=5 keep the hop-indexed-VC channel dependency graph acyclic."""
+    rt = build_routing(sf5_tables.topo, use_pallas=False)
+    n = sf5_tables.n_routers
+    rng = np.random.default_rng(0)
+
+    pairs = set()
+    for wl, scheme in [(ring_all_reduce(RING_K, RING_CHUNK), "spread"),
+                       (graph_scatter(24, 4, iters=1, seed=2), "random")]:
+        eps = place_ranks(sf5_tables, wl.n_ranks, scheme, seed=1)
+        src_r = sf5_tables.ep_router[eps[wl.src]]
+        dst_r = sf5_tables.ep_router[eps[wl.dst]]
+        pairs |= set(zip(src_r.tolist(), dst_r.tolist()))
+
+    paths = []
+    for s, d in sorted(pairs):
+        if s == d:
+            continue
+        paths.append(rt.min_path(s, d))
+        # VAL through sampled intermediates, as route_decision draws them
+        for _ in range(3):
+            i = int(rng.integers(n))
+            while i in (s, d):
+                i = (i + 1) % n
+            paths.append(valiant_path(rt, s, d, i))
+    assert len(paths) > 4 * RING_K
+    assert is_deadlock_free(paths, n)
+
+
+# ---------------------------------------------------------------------------
+# closed-loop engine invariants
+# ---------------------------------------------------------------------------
+
+def test_dag_conservation_and_finite_makespan(ring_run):
+    """Every DAG message injected is delivered exactly once (per-flit
+    counts match message sizes on both ends) and the makespan is
+    finite."""
+    wl, _, r = ring_run
+    assert r.completed
+    assert np.isfinite(r.makespan) and r.makespan > 0
+    np.testing.assert_array_equal(r.msg_sent, wl.size)
+    np.testing.assert_array_equal(r.msg_delivered, wl.size)
+    assert r.flits_delivered == wl.total_flits
+    assert int(r.per_cycle_delivered.sum()) == wl.total_flits
+    # causality: nothing completes before it starts, deps before users
+    assert (r.msg_start >= 0).all() and (r.msg_done > r.msg_start).all()
+    dm = wl.dep_matrix()
+    for mid in range(wl.n_messages):
+        for d in dm[mid]:
+            if d >= 0:
+                assert r.msg_done[d] <= r.msg_start[mid] + 1
+
+
+def test_dependency_serialization_orders_phases(ring_run):
+    """Ring steps are dependency-serialized: mean completion time of
+    all-gather-phase messages exceeds the reduce-scatter phase's."""
+    wl, _, r = ring_run
+    done = r.msg_done.astype(float)
+    assert done[wl.phase == 1].mean() > done[wl.phase == 0].mean()
+
+
+def test_closed_loop_deterministic(sf5_tables, ring_run):
+    wl, cfg, r1 = ring_run
+    r2 = run_workload(sf5_tables, wl, cfg)
+    assert r1.makespan == r2.makespan
+    np.testing.assert_array_equal(r1.msg_done, r2.msg_done)
+
+
+# ---------------------------------------------------------------------------
+# analytic cross-validation (acceptance criterion: within 2x)
+# ---------------------------------------------------------------------------
+
+def test_ring_all_reduce_matches_fabric_model(sf5_tables, ring_run):
+    """Cycle-sim ring all-reduce makespan on SF q=5 agrees with the
+    cycle-calibrated FabricModel ring estimate within 2x."""
+    wl, _, r = ring_run
+    cc = fabric_crosscheck(sf5_tables.topo, "all_reduce",
+                           RING_K * RING_CHUNK, r.ep_of_rank, r.makespan)
+    assert 0.5 <= cc["ratio"] <= 2.0, cc
