@@ -1,0 +1,114 @@
+"""Routed Table III + degraded-mode JCT (§III-D, operational view).
+
+The graph sweep (`table3_resiliency`) asks whether the topology SURVIVES
+link failures; this module asks what the ROUTING still delivers on the
+degraded fabric (cf. Blach et al. 2023): per failure fraction in 5%
+increments, the mean MIN-routing reroute success rate, path stretch and
+full-routability survival from `routed_resilience_sweep`; the mean
+channel-load inflation at a reference fraction; and the closed-loop
+ring-all-reduce JCT inflation (degraded makespan / healthy makespan) on
+rebuilt `SimTables`, for SF vs DF vs FT-3.
+
+fast mode: SF q=5 / DF h=2 / FT-3 p=4, fractions 5..25%.
+REPRO_SMOKE=1: SF q=5 only, fractions {5%, 10%}, tiny all-reduce (CI).
+REPRO_FULL=1: adds SF q=7, fractions to 50%, more samples.
+"""
+
+import os
+
+import numpy as np
+
+from repro.core import build_slimfly
+from repro.core.resiliency import (failure_edge_sample,
+                                   routed_resilience_sweep)
+from repro.core.routing import build_routing, routed_resiliency_metrics
+from repro.core.topologies import build_dragonfly, build_fattree3
+from repro.sim import SimTables
+from repro.sim.workloads import (WorkloadSimConfig, ring_all_reduce,
+                                 run_workload)
+
+
+def _routable_sample(topo, fraction: float, seed: int, tries: int = 20):
+    """First sampled mask (seed, seed+1, ...) that keeps every router
+    pair reachable, so JCT inflation measures rerouting, not partition."""
+    import scipy.sparse as sp
+    import scipy.sparse.csgraph as csgraph
+
+    from repro.core import masked_adjacency
+
+    for s in range(seed, seed + tries):
+        rng = np.random.default_rng(s)
+        fe = failure_edge_sample(topo, fraction, rng)
+        adj = masked_adjacency(topo.adj, fe)
+        n_comp, _ = csgraph.connected_components(sp.csr_matrix(adj),
+                                                 directed=False)
+        if n_comp == 1:
+            return fe
+    return fe                # partitioned fabric: report honestly
+
+
+def run(fast: bool = True):
+    full = os.environ.get("REPRO_FULL", "0") == "1" or not fast
+    smoke = os.environ.get("REPRO_SMOKE", "0") == "1" and not full
+
+    if full:
+        fractions = np.arange(0.05, 0.55, 0.05)
+        n_samples, ranks, chunk_flits, jct_fraction = 10, 32, 8, 0.10
+    elif smoke:
+        fractions = np.array([0.05, 0.10])
+        n_samples, ranks, chunk_flits, jct_fraction = 3, 8, 2, 0.10
+    else:
+        fractions = np.arange(0.05, 0.30, 0.05)
+        n_samples, ranks, chunk_flits, jct_fraction = 5, 16, 4, 0.10
+
+    fabrics = [("sf-q5", build_slimfly(5), "min", False)]
+    if not smoke:
+        fabrics += [
+            ("df-h2", build_dragonfly(h=2), "ugal_l", False),
+            ("ft3-p4", build_fattree3(p=4), "ecmp", True),
+        ]
+    if full:
+        fabrics.insert(1, ("sf-q7", build_slimfly(7), "min", False))
+
+    rows = []
+    for tag, topo, mode, ecmp in fabrics:
+        base_rt = build_routing(topo, use_pallas=False)
+
+        # -- routed Table III: reroute success / stretch / survival -----
+        sweep = routed_resilience_sweep(topo, n_samples=n_samples, seed=7,
+                                        use_pallas=False,
+                                        fractions=fractions)
+        for f, point in sweep.items():
+            rows.append(dict(
+                name=f"faults_sweep/routed/{tag}/f{int(round(f * 100))}",
+                derived=round(point["reroute_success"], 4),
+                stretch=round(point["mean_stretch"], 3),
+                max_stretch=round(point["max_stretch"], 2),
+                survival=round(point["survival"], 2)))
+
+        # -- channel-load inflation at the reference fraction -----------
+        fe = _routable_sample(topo, jct_fraction, seed=11)
+        m = routed_resiliency_metrics(topo, fe, base_rt=base_rt,
+                                      use_pallas=False)
+        rows.append(dict(
+            name=f"faults_sweep/load_inflation/{tag}",
+            derived=round(m.load_inflation, 3),
+            max_inflation=round(m.max_load_inflation, 3),
+            connected=m.connected))
+
+        # -- closed-loop JCT inflation on the degraded fabric -----------
+        wl = ring_all_reduce(ranks, chunk_flits)
+        cfg = WorkloadSimConfig(mode=mode, chunk=128)
+        healthy = run_workload(SimTables.build(topo, ecmp=ecmp), wl, cfg)
+        degraded = run_workload(
+            SimTables.build(topo, ecmp=ecmp, failed_edges=fe), wl, cfg)
+        ratio = (degraded.makespan / healthy.makespan
+                 if np.isfinite(healthy.makespan) and healthy.makespan > 0
+                 else float("inf"))
+        rows.append(dict(
+            name=f"faults_sweep/jct/{tag}/{wl.name}/{mode}",
+            derived=round(ratio, 3),
+            healthy=healthy.makespan,
+            degraded=degraded.makespan,
+            completed=degraded.completed))
+    return rows

@@ -14,6 +14,7 @@ MODULES = [
     "fig5_moore",
     "fig5c_bisection",
     "table3_resiliency",
+    "faults_sweep",
     "fig6_perf",
     "workloads_jct",
     "fig8_buffers",

@@ -1,4 +1,13 @@
-"""Table III + §III-D2/D3: resiliency under random link failures."""
+"""Table III + §III-D2/D3: GRAPH resiliency under random link failures.
+
+`resilience_sweep` stops at the first fraction whose survival rate hits
+0.0, so the returned dict may omit larger fractions; the (fixed)
+`max_tolerated_fraction` scans ascending and stops at the first
+sub-threshold fraction, which treats that missing tail — and any
+non-monotone rebound — as failed.  The ROUTED counterpart (reroute
+success / path stretch / JCT inflation) lives in
+`benchmarks/faults_sweep.py`.
+"""
 
 from repro.core import build_slimfly
 from repro.core.resiliency import max_tolerated_fraction, resilience_sweep

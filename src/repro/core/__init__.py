@@ -19,7 +19,8 @@ from .mms import (
     valid_q,
 )
 from .moore import moore_bound
-from .topology import Topology, bfs_all_pairs
+from .topology import (Topology, apply_link_failures, bfs_all_pairs,
+                       masked_adjacency, normalize_failed_edges)
 
 __all__ = [
     "GF",
@@ -34,4 +35,7 @@ __all__ = [
     "moore_bound",
     "Topology",
     "bfs_all_pairs",
+    "apply_link_failures",
+    "masked_adjacency",
+    "normalize_failed_edges",
 ]

@@ -1,51 +1,80 @@
 """Resiliency analyses under random link failures (paper §III-D).
 
-Three metrics, each reported as the maximum fraction of links that can be
-removed while the network (majority of samples) still satisfies:
+Two families of metrics share one sampling/sweep engine
+(:func:`failure_edge_sample` + :func:`_fraction_sweep`):
+
+GRAPH metrics (the seed reproduction of Table III) — each reported as
+the maximum fraction of links that can be removed while the majority of
+samples still satisfies:
   - 'disconnect':  stays connected                       (§III-D1, Table III)
   - 'diameter':    diameter <= original + 2              (§III-D2)
   - 'avgpath':     average path length <= original + 1   (§III-D3)
 
+ROUTED metrics (the operational view, cf. Blach et al. 2023): what MIN
+routing re-converged on the masked adjacency actually delivers —
+reroute success rate, path stretch and channel-load inflation
+(:func:`repro.core.routing.routed_resiliency_metrics`).
+:func:`routed_resilience_sweep` batches the Pallas min-plus APSP kernel
+over all failure samples of a fraction in one call.
+
 Engines: 'scipy' (C BFS — large networks), 'kernel' (batched Pallas
 min-plus APSP — exercises the TPU path, used for small networks/tests).
+
+Sweep contract: `resilience_sweep` stops early at the first fraction
+with survival rate 0.0 (that fraction IS included in the result);
+larger fractions are absent from the returned dict and MUST be treated
+as failed by consumers.  `max_tolerated_fraction` honours this by
+scanning fractions in ascending order and stopping at the first one
+below threshold, so a missing tail (or a non-monotone rebound after a
+sub-threshold fraction) can never inflate the Table III number.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Literal, Optional
+from typing import Callable, Dict, Literal, Optional
 
 import numpy as np
 import scipy.sparse as sp
 import scipy.sparse.csgraph as csgraph
 
 from ..kernels import apsp
-from .topology import Topology
+from .routing import build_routing, routed_resiliency_metrics
+from .topology import Topology, masked_adjacency
 
-__all__ = ["failure_sample", "metric_after_failures", "resilience_sweep",
-           "max_tolerated_fraction"]
+__all__ = ["failure_edge_sample", "failure_sample", "metric_after_failures",
+           "resilience_sweep", "max_tolerated_fraction",
+           "routed_resilience_sweep"]
 
 Metric = Literal["disconnect", "diameter", "avgpath"]
+
+
+def failure_edge_sample(topo: Topology, fraction: float,
+                        rng: np.random.Generator) -> np.ndarray:
+    """floor(fraction * |E|) random undirected edges, as an [K, 2] mask
+    (the DESIGN.md §8 convention, consumable by every fault-aware layer)."""
+    edges = topo.edge_list()
+    n_kill = int(np.floor(fraction * len(edges)))
+    kill = rng.choice(len(edges), size=n_kill, replace=False)
+    return edges[kill]
 
 
 def failure_sample(topo: Topology, fraction: float, rng: np.random.Generator
                    ) -> np.ndarray:
     """Remove floor(fraction * |E|) random undirected edges; returns adj."""
-    edges = topo.edge_list()
-    n_kill = int(np.floor(fraction * len(edges)))
-    kill = rng.choice(len(edges), size=n_kill, replace=False)
-    adj = topo.adj.copy()
-    e = edges[kill]
-    adj[e[:, 0], e[:, 1]] = False
-    adj[e[:, 1], e[:, 0]] = False
-    return adj
+    return masked_adjacency(topo.adj, failure_edge_sample(topo, fraction, rng))
+
+
+def _connected(adj: np.ndarray) -> bool:
+    n_comp, _ = csgraph.connected_components(sp.csr_matrix(adj),
+                                             directed=False)
+    return n_comp == 1
 
 
 def _scipy_metrics(adj: np.ndarray):
-    g = sp.csr_matrix(adj)
-    n_comp, _ = csgraph.connected_components(g, directed=False)
-    if n_comp > 1:
+    if not _connected(adj):
         return False, np.inf, np.inf
-    d = csgraph.shortest_path(g, method="D", unweighted=True, directed=False)
+    d = csgraph.shortest_path(sp.csr_matrix(adj), method="D",
+                              unweighted=True, directed=False)
     n = adj.shape[0]
     return True, float(d.max()), float(d.sum() / (n * (n - 1)))
 
@@ -71,12 +100,18 @@ def metric_after_failures(topo: Topology, fraction: float, metric: Metric,
                           engine: str = "scipy",
                           base_diameter: Optional[float] = None,
                           base_avgpath: Optional[float] = None) -> float:
-    """Fraction of samples that SURVIVE the metric threshold."""
+    """Fraction of samples that SURVIVE the metric threshold.
+
+    Baselines are computed lazily and only for what `metric` actually
+    uses: 'disconnect' needs none, 'diameter' only the base diameter,
+    'avgpath' only the base average path length."""
     rng = np.random.default_rng(seed)
-    if metric in ("diameter", "avgpath") and (base_diameter is None
-                                              or base_avgpath is None):
-        ok, base_diameter, base_avgpath = _scipy_metrics(topo.adj)
-        assert ok
+    if ((metric == "diameter" and base_diameter is None)
+            or (metric == "avgpath" and base_avgpath is None)):
+        ok, bd, bp = _scipy_metrics(topo.adj)
+        assert ok, "baseline topology disconnected"
+        base_diameter = bd if base_diameter is None else base_diameter
+        base_avgpath = bp if base_avgpath is None else base_avgpath
 
     samples = [failure_sample(topo, fraction, rng) for _ in range(n_samples)]
     if engine == "kernel":
@@ -95,33 +130,112 @@ def metric_after_failures(topo: Topology, fraction: float, metric: Metric,
     return ok_count / n_samples
 
 
+def _fraction_sweep(fractions: np.ndarray,
+                    evaluate: Callable[[float], object],
+                    stop: Optional[Callable[[object], bool]] = None
+                    ) -> Dict[float, object]:
+    """Shared sweep driver: evaluate each fraction in ascending order,
+    optionally stopping early.  Keys are rounded to the 5%-grid style."""
+    out: Dict[float, object] = {}
+    for f in np.sort(np.asarray(fractions, dtype=np.float64)):
+        val = evaluate(float(f))
+        out[round(float(f), 2)] = val
+        if stop is not None and stop(val):
+            break
+    return out
+
+
 def resilience_sweep(topo: Topology, metric: Metric = "disconnect",
                      n_samples: int = 20, seed: int = 0,
                      engine: str = "scipy",
                      fractions: Optional[np.ndarray] = None
                      ) -> Dict[float, float]:
-    """Survival rate at each failure fraction (5% increments, paper style)."""
+    """Survival rate at each failure fraction (5% increments, paper style).
+
+    Stops at the first fraction with rate 0.0 (included in the dict);
+    consumers must treat absent larger fractions as failed — see the
+    module docstring and `max_tolerated_fraction`."""
     if fractions is None:
         fractions = np.arange(0.05, 1.0, 0.05)
-    ok, bd, bp = _scipy_metrics(topo.adj)
-    assert ok, "baseline topology disconnected"
-    out = {}
-    for f in fractions:
-        rate = metric_after_failures(topo, float(f), metric, n_samples,
+    if metric == "disconnect":
+        assert _connected(topo.adj), "baseline topology disconnected"
+        bd = bp = None              # baselines unused by this metric
+    else:
+        ok, bd, bp = _scipy_metrics(topo.adj)
+        assert ok, "baseline topology disconnected"
+
+    def evaluate(f: float) -> float:
+        return metric_after_failures(topo, f, metric, n_samples,
                                      seed=seed + int(f * 1000), engine=engine,
                                      base_diameter=bd, base_avgpath=bp)
-        out[round(float(f), 2)] = rate
-        if rate == 0.0:   # monotone enough in practice — stop early
-            break
-    return out
+
+    return _fraction_sweep(fractions, evaluate, stop=lambda r: r == 0.0)
 
 
 def max_tolerated_fraction(sweep: Dict[float, float],
                            threshold: float = 0.5) -> float:
-    """Largest tested fraction whose survival rate >= threshold (the
-    Table III number)."""
+    """Largest tested fraction f such that EVERY tested fraction <= f has
+    survival rate >= threshold (the Table III number).
+
+    Scans in ascending order and stops at the first sub-threshold
+    fraction, so non-monotone rebounds above it do not count, and the
+    fractions `resilience_sweep` omitted after its early stop (all
+    larger than a rate-0.0 fraction) are correctly treated as failed."""
     best = 0.0
     for f in sorted(sweep):
         if sweep[f] >= threshold:
             best = f
+        else:
+            break
     return best
+
+
+def routed_resilience_sweep(topo: Topology, n_samples: int = 10,
+                            seed: int = 0, use_pallas: bool = True,
+                            fractions: Optional[np.ndarray] = None,
+                            channel_load: bool = False
+                            ) -> Dict[float, Dict[str, float]]:
+    """Routed Table III: per failure fraction, aggregate MIN-routing
+    metrics over `n_samples` masks — the mean reroute success rate, the
+    mean/max path stretch over still-reachable pairs, and the fraction
+    of samples whose fabric stays fully routable ('survival', the
+    routed analogue of the 'disconnect' rate).
+
+    Distances for all samples of a fraction come from ONE batched
+    min-plus APSP kernel call.  `channel_load=True` additionally walks
+    per-sample MIN routes for the mean channel-load inflation (python
+    loop — use on small networks / few samples)."""
+    if fractions is None:
+        fractions = np.arange(0.05, 0.55, 0.05)
+    n = topo.n_routers
+    off = ~np.eye(n, dtype=bool)
+    n_pairs = n * (n - 1)
+    base = build_routing(topo, use_pallas=use_pallas)
+    base_dist = np.maximum(base.dist.astype(np.float64), 1.0)
+
+    def evaluate(f: float) -> Dict[str, float]:
+        rng = np.random.default_rng(seed + int(f * 1000))
+        masks = [failure_edge_sample(topo, f, rng) for _ in range(n_samples)]
+        adjs = np.stack([masked_adjacency(topo.adj, fe) for fe in masks])
+        d = np.asarray(apsp(adjs, max_diameter=n, use_pallas=use_pallas))
+        reach = (d < 1e37) & off[None]
+        success = reach.sum(axis=(1, 2)) / n_pairs           # [S]
+        stretch = np.where(reach, d / base_dist[None], np.nan)
+        any_reach = bool(reach.any())
+        out = dict(
+            reroute_success=float(success.mean()),
+            survival=float((success == 1.0).mean()),
+            mean_stretch=(float(np.nanmean(stretch)) if any_reach
+                          else float("inf")),
+            max_stretch=(float(np.nanmax(stretch)) if any_reach
+                         else float("inf")),
+        )
+        if channel_load:
+            infl = [routed_resiliency_metrics(
+                        topo, fe, base_rt=base,
+                        use_pallas=use_pallas).load_inflation
+                    for fe in masks]
+            out["load_inflation"] = float(np.mean(infl))
+        return out
+
+    return _fraction_sweep(fractions, evaluate)

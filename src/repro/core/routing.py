@@ -20,9 +20,10 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..kernels import apsp
-from .topology import Topology
+from .topology import Topology, masked_adjacency, normalize_failed_edges
 
 __all__ = [
+    "UNREACH",
     "RoutingTables",
     "build_routing",
     "valiant_path",
@@ -31,18 +32,40 @@ __all__ = [
     "is_deadlock_free",
     "channel_load_uniform",
     "analytic_channel_load",
+    "RoutedMetrics",
+    "routed_resiliency_metrics",
 ]
+
+# Hop-distance sentinel for pairs disconnected by link failures.  Small
+# enough that int16 holds it and that the int32 sum of two sentinels
+# (UGAL's len_min/len_val arithmetic in the simulator) cannot overflow,
+# large enough that no real path length reaches it.
+UNREACH = np.int16(1 << 14)
 
 
 @dataclasses.dataclass
 class RoutingTables:
     topo: Topology
-    dist: np.ndarray             # [N_r, N_r] int16 hop distances
+    dist: np.ndarray             # [N_r, N_r] int16 hops (UNREACH = cut off)
     next_hop: np.ndarray         # [N_r, N_r] int32 deterministic MIN next hop
     next_hops_all: List[List[np.ndarray]] | None  # equal-cost sets (optional)
+    # live adjacency the tables were computed on (== topo.adj unless a
+    # failure mask was applied) and the mask itself ([K, 2] or None).
+    adj: Optional[np.ndarray] = None
+    failed_edges: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        if self.adj is None:
+            self.adj = self.topo.adj
+
+    @property
+    def reachable(self) -> np.ndarray:
+        """[N_r, N_r] bool: pairs with a surviving route."""
+        return self.dist < UNREACH
 
     def min_path(self, s: int, d: int) -> List[int]:
         """Deterministic minimal path (router sequence, inclusive)."""
+        assert self.dist[s, d] < UNREACH, f"no route {s} -> {d}"
         path = [s]
         cur = s
         while cur != d:
@@ -55,32 +78,48 @@ class RoutingTables:
         """All shortest paths (for path-diversity analysis; D <= 2 graphs)."""
         if s == d:
             return [[s]]
-        if self.topo.adj[s, d]:
+        if self.adj[s, d]:
             return [[s, d]]
-        mids = np.nonzero(self.topo.adj[s] & self.topo.adj[d])[0]
-        if len(mids):
+        if self.dist[s, d] >= UNREACH:
+            return []
+        mids = np.nonzero(self.adj[s] & self.adj[d])[0]
+        if len(mids) and self.dist[s, d] == 2:
             return [[s, int(m), d] for m in mids]
         # fall back to generic DFS along decreasing distance
         out = []
-        for n in np.nonzero(self.topo.adj[s])[0]:
+        for n in np.nonzero(self.adj[s])[0]:
             if self.dist[n, d] == self.dist[s, d] - 1:
                 out.extend([[s] + rest for rest in self.min_paths_all(int(n), d)])
         return out
 
 
 def build_routing(topo: Topology, use_pallas: bool = True,
-                  equal_cost_sets: bool = False) -> RoutingTables:
+                  equal_cost_sets: bool = False,
+                  failed_edges=None) -> RoutingTables:
+    """Distance/next-hop tables; with `failed_edges` (see DESIGN.md §8)
+    the tables are computed on the masked adjacency: routes re-converge
+    around dead links, disconnected pairs get dist = UNREACH and
+    next_hop = -1 instead of tripping the connectivity assert."""
     n = topo.n_routers
+    adj = topo.adj
+    if failed_edges is not None:
+        failed_edges = normalize_failed_edges(failed_edges, topo)
+        adj = masked_adjacency(adj, failed_edges)
     max_d = topo.params.get("diameter_hint", min(n, 64))
-    d = np.asarray(apsp(topo.adj, max_diameter=max_d, use_pallas=use_pallas))
-    assert (d < 1e37).all(), "disconnected topology"
-    dist = d.astype(np.int16)
+    if failed_edges is not None and len(failed_edges):
+        max_d = n                  # failures can exceed the healthy diameter
+    d = np.asarray(apsp(adj, max_diameter=max_d, use_pallas=use_pallas))
+    if failed_edges is None:
+        assert (d < 1e37).all(), "disconnected topology"
+    dist = np.where(d < 1e37, d, float(UNREACH)).astype(np.int16)
 
     # next_hop[r, t] = lowest-index neighbor n of r with dist[n,t] = dist[r,t]-1
-    adj = topo.adj
     next_hop = np.full((n, n), -1, dtype=np.int32)
     for r in range(n):
         nbrs = np.nonzero(adj[r])[0]                      # [deg]
+        if len(nbrs) == 0:                 # router fully cut off by mask
+            next_hop[r, r] = r
+            continue
         # dist from each neighbor to every target: [deg, n]
         dn = dist[nbrs, :]
         good = dn == (dist[r, :][None, :] - 1)            # [deg, n]
@@ -98,7 +137,8 @@ def build_routing(topo: Topology, use_pallas: bool = True,
             good = dn == (dist[r, :][None, :] - 1)
             all_sets.append([nbrs[good[:, t]] for t in range(n)])
     return RoutingTables(topo=topo, dist=dist, next_hop=next_hop,
-                         next_hops_all=all_sets)
+                         next_hops_all=all_sets, adj=adj,
+                         failed_edges=failed_edges)
 
 
 def valiant_path(rt: RoutingTables, s: int, d: int, r_inter: int) -> List[int]:
@@ -171,22 +211,24 @@ def channel_load_uniform(rt: RoutingTables, p: Optional[int] = None
     topo = rt.topo
     n = topo.n_routers
     p = p if p is not None else topo.p
+    adj = rt.adj                     # live adjacency (mask-aware)
     load = np.zeros((n, n), dtype=np.float64)
     # D <= 2 fast path: direct edges get 1, two-hop routes via next_hop
     for s in range(n):
-        t_direct = np.nonzero(topo.adj[s])[0]
+        t_direct = np.nonzero(adj[s])[0]
         load[s, t_direct] += 1.0
         t_two = np.nonzero(rt.dist[s] == 2)[0]
         mids = rt.next_hop[s, t_two]
         np.add.at(load, (np.full_like(mids, s), mids), 1.0)
         np.add.at(load, (mids, t_two), 1.0)
-        # distances > 2: walk (generic topologies)
-        t_far = np.nonzero(rt.dist[s] > 2)[0]
+        # distances > 2: walk (generic topologies); unreachable pairs
+        # (failure mask) simply contribute no routes
+        t_far = np.nonzero((rt.dist[s] > 2) & (rt.dist[s] < UNREACH))[0]
         for t in t_far:
             path = rt.min_path(s, int(t))
             for u, v in zip(path[:-1], path[1:]):
                 load[u, v] += 1.0
-    chan = load[topo.adj]           # only physical channels
+    chan = load[adj]                 # only live physical channels
     scale = p * p                    # p^2 endpoint pairs per router pair
     return float(chan.mean() * scale), float(chan.max() * scale)
 
@@ -194,3 +236,54 @@ def channel_load_uniform(rt: RoutingTables, p: Optional[int] = None
 def analytic_channel_load(kprime: int, n_r: int, p: int) -> float:
     """Paper's closed form: l = (2 N_r - k' - 2) p^2 / k'."""
     return (2 * n_r - kprime - 2) * p * p / kprime
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutedMetrics:
+    """Routed view of §III-D: what MIN routing delivers on a degraded
+    fabric (cf. Blach et al. 2023's operational resiliency criteria)."""
+    n_failed: int                   # undirected links removed
+    connected: bool                 # every router pair still reachable
+    reroute_success: float          # reachable fraction of ordered s != d pairs
+    mean_stretch: float             # mean dist_failed / dist_healthy (reachable)
+    max_stretch: float
+    load_inflation: float           # mean live-channel load / healthy mean
+    max_load_inflation: float       # max live-channel load / healthy max
+
+
+def routed_resiliency_metrics(topo: Topology, failed_edges,
+                              base_rt: Optional[RoutingTables] = None,
+                              use_pallas: bool = False) -> RoutedMetrics:
+    """Reroute success / path stretch / channel-load inflation of MIN
+    routing re-converged on the masked adjacency, vs the healthy tables.
+
+    A zero-length mask reproduces the healthy numbers exactly
+    (stretch = inflation = 1, success = 1)."""
+    fe = normalize_failed_edges(failed_edges, topo)
+    base_rt = base_rt or build_routing(topo, use_pallas=use_pallas)
+    rt = build_routing(topo, use_pallas=use_pallas, failed_edges=fe)
+
+    n = topo.n_routers
+    off = ~np.eye(n, dtype=bool)
+    reach = rt.reachable & off
+    n_pairs = n * (n - 1)
+    success = float(reach.sum() / n_pairs)
+
+    if reach.any():
+        stretch = (rt.dist[reach].astype(np.float64)
+                   / np.maximum(base_rt.dist[reach], 1).astype(np.float64))
+        mean_stretch, max_stretch = float(stretch.mean()), float(stretch.max())
+    else:
+        mean_stretch = max_stretch = float("inf")
+
+    base_avg, base_max = channel_load_uniform(base_rt)
+    avg, mx = channel_load_uniform(rt)
+    return RoutedMetrics(
+        n_failed=len(fe),
+        connected=bool(reach.sum() == n_pairs),
+        reroute_success=success,
+        mean_stretch=mean_stretch,
+        max_stretch=max_stretch,
+        load_inflation=float(avg / base_avg),
+        max_load_inflation=float(mx / base_max),
+    )

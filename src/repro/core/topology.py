@@ -13,7 +13,9 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-__all__ = ["Topology", "edges_from_adj", "bfs_all_pairs"]
+__all__ = ["Topology", "edges_from_adj", "bfs_all_pairs",
+           "normalize_failed_edges", "masked_adjacency",
+           "apply_link_failures"]
 
 
 @dataclasses.dataclass
@@ -118,6 +120,49 @@ def edges_from_adj(adj: np.ndarray) -> np.ndarray:
     iu = np.triu_indices(adj.shape[0], k=1)
     mask = adj[iu]
     return np.stack([iu[0][mask], iu[1][mask]], axis=1).astype(np.int32)
+
+
+def normalize_failed_edges(failed_edges, topo: Optional["Topology"] = None
+                           ) -> np.ndarray:
+    """Canonical failure mask: int32 [K, 2] of undirected router pairs.
+
+    Accepts an [K, 2] array of router-id pairs (either endpoint order) or,
+    when `topo` is given, a bool mask over `topo.edge_list()` rows.  The
+    empty mask is a valid (healthy) input.
+    """
+    fe = np.asarray(failed_edges)
+    if fe.dtype == bool:
+        assert topo is not None, "bool edge mask needs the topology"
+        edges = topo.edge_list()
+        assert fe.shape == (len(edges),), (fe.shape, len(edges))
+        fe = edges[fe]
+    fe = fe.reshape(-1, 2).astype(np.int32)
+    return fe
+
+
+def masked_adjacency(adj: np.ndarray, failed_edges: np.ndarray) -> np.ndarray:
+    """Adjacency with the failed undirected edges removed (both directions)."""
+    out = adj.copy()
+    fe = normalize_failed_edges(failed_edges)
+    out[fe[:, 0], fe[:, 1]] = False
+    out[fe[:, 1], fe[:, 0]] = False
+    return out
+
+
+def apply_link_failures(topo: Topology, failed_edges) -> Topology:
+    """Degraded copy of `topo` with the masked links removed.  Keeps p,
+    params and the endpoint mask; only the router graph changes."""
+    fe = normalize_failed_edges(failed_edges, topo)
+    if len(fe) == 0:
+        return topo
+    return Topology(
+        name=f"{topo.name}-f{len(fe)}",
+        adj=masked_adjacency(topo.adj, fe),
+        p=topo.p,
+        params=dict(topo.params, failed_edges=len(fe)),
+        endpoint_mask=(None if topo.endpoint_mask is None
+                       else topo.endpoint_mask.copy()),
+    )
 
 
 def bfs_all_pairs(adj: np.ndarray) -> np.ndarray:

@@ -35,7 +35,7 @@ from typing import Dict, Iterable, Optional
 
 import numpy as np
 
-from ..core.topology import Topology
+from ..core.topology import Topology, apply_link_failures
 
 __all__ = ["FabricModel", "CollectiveEstimate"]
 
@@ -65,7 +65,14 @@ class FabricModel:
     def __init__(self, topo: Topology,
                  link_bandwidth: float = 12.5e9,    # B/s (100 Gb/s)
                  link_latency: float = 100e-9,      # per router-router hop
-                 alpha: float = 1e-6):              # per-message software
+                 alpha: float = 1e-6,               # per-message software
+                 failed_edges=None):                # DESIGN.md §8 link mask
+        if failed_edges is not None:
+            # degrade the fabric consistently with routing/sim: hop
+            # distances grow, the edge count (congestion denominator)
+            # shrinks, and the bisection is re-partitioned on the
+            # masked graph.  A disconnected group yields inf estimates.
+            topo = apply_link_failures(topo, failed_edges)
         self.topo = topo
         self.link_bandwidth = float(link_bandwidth)
         self.link_latency = float(link_latency)

@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.routing import UNREACH
 from .tables import SimTables
 from .traffic import Traffic
 
@@ -56,6 +57,11 @@ __all__ = ["SimConfig", "SimResult", "SwitchCore", "simulate"]
 
 DST, INTER, TIME, HOPS, PHASE, MSG = range(6)
 BIG = jnp.int32(1 << 30)
+# occupancy values entering UGAL scores are clamped here so that the
+# dead-port sentinel (occupancy() returns BIG for nbr < 0) cannot
+# overflow int32 when multiplied by a path length, while still dwarfing
+# any real queue depth (degraded fabrics, DESIGN.md §8)
+OCC_CAP = jnp.int32(1 << 20)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,6 +151,8 @@ class SwitchCore:
         self.ep_block_router = jnp.asarray(tables.ep_router[::self.p])
         self.n_epr = self.n_ep // self.p
 
+        self.unreach = jnp.int32(int(UNREACH))
+
         self.NQ = N * P * V
         self.R = self.NQ + self.n_ep
         self.eids = jnp.arange(self.n_ep)
@@ -197,9 +205,13 @@ class SwitchCore:
             for bump in (1, 1):
                 bad = (i == src_r) | (i == dst_r)
                 i = jnp.where(bad, (i + bump) % N, i)
-            return i, jnp.zeros_like(dst_r)
+            # degraded fabrics: only detour via intermediates that can
+            # still reach both endpoints; dead draws fall back to MIN
+            live = (dist[src_r, i] + dist[i, dst_r]) < self.unreach
+            return (jnp.where(live, i, dst_r),
+                    (~live).astype(jnp.int32))
 
-        # UGAL: score MIN vs C random VAL candidates
+        # UGAL: score MIN vs C random VAL candidates (live ones only)
         cands = jax.random.randint(key, (n_ep, C), 0, N)
         for bump in (1, 2):
             bad = (cands == src_r[:, None]) | (cands == dst_r[:, None])
@@ -207,7 +219,9 @@ class SwitchCore:
 
         def first_occ(s, t):
             o = port_toward[s, t]
-            return jnp.where(o >= 0, occ[s, jnp.maximum(o, 0)], 0)
+            return jnp.where(o >= 0,
+                             jnp.minimum(occ[s, jnp.maximum(o, 0)], OCC_CAP),
+                             0)
 
         def path_occ(s, t):
             """Occupancy sum along the MIN path (D <= 2 fast form)."""
@@ -215,10 +229,12 @@ class SwitchCore:
             m = nbr[s, jnp.maximum(o1, 0)]
             two = dist[s, t] >= 2
             second = jnp.where(two, first_occ(m, t), 0)
-            return jnp.where(o1 >= 0, occ[s, jnp.maximum(o1, 0)], 0) + second
+            return first_occ(s, t) + second
 
         len_min = dist[src_r, dst_r]                              # [n_ep]
         len_val = dist[src_r[:, None], cands] + dist[cands, dst_r[:, None]]
+        live_min = len_min < self.unreach
+        live_val = len_val < self.unreach
         if mode == "ugal_l":
             score_min = len_min * first_occ(src_r, dst_r)
             score_val = len_val * first_occ(src_r[:, None], cands)
@@ -226,6 +242,8 @@ class SwitchCore:
             score_min = path_occ(src_r, dst_r) + len_min
             score_val = (path_occ(src_r[:, None], cands)
                          + path_occ(cands, dst_r[:, None]) + len_val)
+        score_min = jnp.where(live_min, score_min, BIG)
+        score_val = jnp.where(live_val, score_val, BIG)
 
         scores = jnp.concatenate([score_min[:, None], score_val], axis=1)
         inters = jnp.concatenate([dst_r[:, None], cands], axis=1)
@@ -239,17 +257,30 @@ class SwitchCore:
         tgt = jnp.where(pkt[..., PHASE] == 1, pkt[..., DST],
                         pkt[..., INTER])
         eject = (pkt[..., DST] == router) & (pkt[..., PHASE] == 1)
+        min_port = self.port_toward[router, tgt]
         if self.has_ecmp:
+            # dead alternates are skipped automatically: occupancy() is
+            # BIG where nbr < 0, so argmin lands on a live port
             opts = self.ecmp_ports[router, tgt]                   # [..., M]
             r_b = jnp.broadcast_to(router[..., None], opts.shape)
             o_occ = jnp.where(opts >= 0,
                               occ[r_b, jnp.maximum(opts, 0)], BIG)
             pick = jnp.argmin(o_occ, axis=-1)
-            out_port = jnp.take_along_axis(opts, pick[..., None],
-                                           -1)[..., 0]
+            ecmp_port = jnp.take_along_axis(opts, pick[..., None],
+                                            -1)[..., 0]
+            if self.mode == "ecmp":
+                out_port = ecmp_port
+            else:
+                # MIN first; equal-cost alternate only when the MIN
+                # port is dead (transient failure mask on tables whose
+                # routes have not re-converged, DESIGN.md §8)
+                min_dead = ((min_port >= 0)
+                            & (self.nbr[router,
+                                        jnp.maximum(min_port, 0)] < 0))
+                out_port = jnp.where(min_dead, ecmp_port, min_port)
             out_port = jnp.where(eject, -1, out_port)
         else:
-            out_port = self.port_toward[router, tgt]
+            out_port = min_port
         out_vc = jnp.minimum(pkt[..., HOPS], self.V - 1)
         return out_port, out_vc, eject
 

@@ -1,4 +1,15 @@
-"""Dense JAX-consumable routing/port tables derived from a Topology."""
+"""Dense JAX-consumable routing/port tables derived from a Topology.
+
+Fault model (DESIGN.md §8): `build(..., failed_edges=...)` rebuilds the
+tables on the masked adjacency — port numbering stays that of the
+HEALTHY fabric (sorted neighbor ids of the unmasked graph) so shapes
+and port ids are comparable across masks; dead ports become `-1` pads
+in `nbr`/`rev_port`, and `port_toward`/`ecmp_ports`/`dist` are
+recomputed from the re-converged routing.  `with_failures(...,
+rebuild=False)` instead only kills the ports and leaves the stale route
+tables in place — the transient window before routing re-converges,
+survivable only via the engine's ECMP fallback.
+"""
 
 from __future__ import annotations
 
@@ -8,7 +19,7 @@ from typing import Optional
 import numpy as np
 
 from ..core.routing import RoutingTables, build_routing
-from ..core.topology import Topology
+from ..core.topology import Topology, normalize_failed_edges
 
 __all__ = ["SimTables"]
 
@@ -18,18 +29,20 @@ class SimTables:
     """Everything the engine needs, as host numpy (moved to device lazily).
 
     Ports of router r: 0..deg(r)-1 network ports (order = sorted neighbor
-    ids); the ejection "port" is virtual (engine-side).
+    ids of the healthy fabric); the ejection "port" is virtual
+    (engine-side).  Dead ports (link failures) hold -1.
     """
     topo: Topology
     n_routers: int
     P: int                        # max network ports (k')
     p: int                        # endpoints per endpoint-router
-    nbr: np.ndarray               # [N, P] neighbor router (-1 pad)
+    nbr: np.ndarray               # [N, P] neighbor router (-1 pad/dead)
     rev_port: np.ndarray          # [N, P] port index at nbr pointing back
     port_toward: np.ndarray       # [N, N] first-hop port of MIN route (-1 self)
-    dist: np.ndarray              # [N, N] int16
+    dist: np.ndarray              # [N, N] int16 (UNREACH when cut off)
     ep_router: np.ndarray         # [N_ep] router id of each endpoint
     ecmp_ports: Optional[np.ndarray] = None   # [N, N, M] equal-cost ports
+    failed_edges: Optional[np.ndarray] = None  # [K, 2] mask these tables saw
 
     @property
     def n_endpoints(self) -> int:
@@ -37,14 +50,36 @@ class SimTables:
 
     @classmethod
     def build(cls, topo: Topology, rt: Optional[RoutingTables] = None,
-              ecmp: bool = False) -> "SimTables":
+              ecmp: bool = False,
+              failed_edges: Optional[np.ndarray] = None) -> "SimTables":
+        if failed_edges is not None:
+            failed_edges = normalize_failed_edges(failed_edges, topo)
+        if rt is not None and failed_edges is not None:
+            # a pre-built rt must have seen the same mask, or the port
+            # tables would silently disagree with `failed_edges`
+            have = rt.failed_edges
+            assert have is not None and np.array_equal(
+                np.sort(np.sort(have, axis=1), axis=0),
+                np.sort(np.sort(failed_edges, axis=1), axis=0)), \
+                "rt was not built with the given failed_edges mask"
         rt = rt or build_routing(topo, use_pallas=False,
-                                 equal_cost_sets=ecmp)
+                                 equal_cost_sets=ecmp,
+                                 failed_edges=failed_edges)
+        if failed_edges is None and rt.failed_edges is not None:
+            failed_edges = rt.failed_edges
         n = topo.n_routers
         P = topo.network_radix
+        # healthy port order, then kill failed links -> -1 pads
         nbr = topo.neighbor_lists(pad_to=P).astype(np.int32)
+        if failed_edges is not None and len(failed_edges):
+            dead = ~rt.adj                    # live adjacency from routing
+            for r in range(n):
+                for o in range(P):
+                    v = nbr[r, o]
+                    if v >= 0 and dead[r, v]:
+                        nbr[r, o] = -1
 
-        # port index of a given neighbor: inverse of nbr
+        # port index of a given neighbor: inverse of nbr (live links only)
         port_of = np.full((n, n), -1, dtype=np.int32)
         for r in range(n):
             for o in range(P):
@@ -63,12 +98,13 @@ class SimTables:
         nh = rt.next_hop
         rr = np.repeat(np.arange(n), n)
         tt = np.tile(np.arange(n), n)
-        mask = nh.ravel() != np.arange(n).repeat(n)  # exclude self
+        # exclude self and unreachable (next_hop -1) targets
+        mask = (nh.ravel() != np.arange(n).repeat(n)) & (nh.ravel() >= 0)
         port_toward[rr[mask], tt[mask]] = port_of[rr[mask], nh.ravel()[mask]]
 
         ecmp_ports = None
         if ecmp:
-            width = 0
+            width = 1
             sets = rt.next_hops_all
             for r in range(n):
                 for t in range(n):
@@ -89,4 +125,33 @@ class SimTables:
         return cls(topo=topo, n_routers=n, P=P, p=topo.p, nbr=nbr,
                    rev_port=rev_port, port_toward=port_toward,
                    dist=rt.dist.astype(np.int16), ep_router=ep_router,
-                   ecmp_ports=ecmp_ports)
+                   ecmp_ports=ecmp_ports, failed_edges=failed_edges)
+
+    def with_failures(self, failed_edges,
+                      rebuild: bool = True) -> "SimTables":
+        """Degraded copy of these tables under an (additional) link mask.
+
+        rebuild=True re-converges routing on the masked adjacency (the
+        steady degraded state).  rebuild=False only marks the dead
+        ports (-1 in nbr/rev_port) and keeps the stale port_toward /
+        ecmp_ports / dist — the unconverged transient, where delivery
+        relies on the engine's dead-port ECMP fallback.
+        """
+        fe = normalize_failed_edges(failed_edges, self.topo)
+        if self.failed_edges is not None and len(self.failed_edges):
+            fe = np.concatenate([self.failed_edges, fe], axis=0)
+        if rebuild:
+            return SimTables.build(self.topo, ecmp=self.ecmp_ports is not None,
+                                   failed_edges=fe)
+        nbr = self.nbr.copy()
+        rev_port = self.rev_port.copy()
+        dead = set(map(tuple, np.sort(fe, axis=1)))
+        n = self.n_routers
+        for r in range(n):
+            for o in range(self.P):
+                v = nbr[r, o]
+                if v >= 0 and (min(r, v), max(r, v)) in dead:
+                    nbr[r, o] = -1
+                    rev_port[r, o] = -1
+        return dataclasses.replace(self, nbr=nbr, rev_port=rev_port,
+                                   failed_edges=fe)

@@ -38,3 +38,11 @@ def test_benchmark_fast_mode(modname, monkeypatch):
         ratios = [row["fabric_ratio"] for row in rows
                   if "fabric_ratio" in row]
         assert ratios and all(0.2 < r < 5.0 for r in ratios), ratios
+    if modname == "faults_sweep":
+        # routed resiliency rows plus a completed degraded-JCT row
+        names = " ".join(row["name"] for row in rows)
+        assert "/routed/" in names and "/jct/" in names, names
+        jct = [row for row in rows if "/jct/" in row["name"]]
+        assert jct and all(row["completed"] for row in jct), jct
+        routed = [row for row in rows if "/routed/" in row["name"]]
+        assert all(0.0 <= row["derived"] <= 1.0 for row in routed), routed

@@ -1,0 +1,208 @@
+"""Failure-aware routing + degraded-mode simulation (DESIGN.md §8).
+
+Covers the ISSUE-3 acceptance criteria on SF MMS q=5 with 10% random
+link failures: full reroute success while connected, deadlock-freedom
+of the degraded MIN+VAL path set the engine uses, and a finite
+closed-loop all-reduce makespan on the degraded SimTables — plus the
+zero-mask exactness and channel-load property tests.
+"""
+
+import numpy as np
+import pytest
+
+# hypothesis when installed, deterministic fallback otherwise
+from _hypothesis_compat import given, settings, st
+
+from repro.core import build_slimfly
+from repro.core.resiliency import failure_edge_sample
+from repro.core.routing import (
+    UNREACH,
+    analytic_channel_load,
+    build_routing,
+    channel_load_uniform,
+    is_deadlock_free,
+    routed_resiliency_metrics,
+    valiant_path,
+)
+from repro.dist.topology_aware import FabricModel
+from repro.sim import SimConfig, SimTables, make_traffic, simulate
+from repro.sim.workloads import (
+    WorkloadSimConfig,
+    ring_all_reduce,
+    run_workload,
+)
+
+
+@pytest.fixture(scope="module")
+def sf5():
+    return build_slimfly(5)
+
+
+@pytest.fixture(scope="module")
+def mask10(sf5):
+    """10% random link failures that keep the fabric connected."""
+    for seed in range(20):
+        fe = failure_edge_sample(sf5, 0.10,
+                                 np.random.default_rng(seed))
+        rt = build_routing(sf5, use_pallas=False, failed_edges=fe)
+        if rt.reachable.all():
+            return fe, rt
+    pytest.fail("no connected 10% sample in 20 seeds")
+
+
+# -- routed metrics ----------------------------------------------------------
+
+def test_reroute_success_full_while_connected(sf5, mask10):
+    """Acceptance: 10% failures, fabric connected => 100% reroute
+    success, with bounded stretch and load inflation >= 1."""
+    fe, _ = mask10
+    m = routed_resiliency_metrics(sf5, fe, use_pallas=False)
+    assert m.connected
+    assert m.reroute_success == 1.0
+    assert 1.0 <= m.mean_stretch <= m.max_stretch < np.inf
+    assert m.load_inflation >= 1.0
+
+
+def test_zero_failure_mask_reproduces_healthy_exactly(sf5):
+    rt = build_routing(sf5, use_pallas=False)
+    rt0 = build_routing(sf5, use_pallas=False,
+                        failed_edges=np.zeros((0, 2), np.int32))
+    assert (rt0.dist == rt.dist).all()
+    assert (rt0.next_hop == rt.next_hop).all()
+    assert rt0.reachable.all()
+    m = routed_resiliency_metrics(sf5, np.zeros((0, 2), np.int32),
+                                  base_rt=rt, use_pallas=False)
+    assert m.reroute_success == 1.0
+    assert m.mean_stretch == m.max_stretch == 1.0
+    assert m.load_inflation == m.max_load_inflation == 1.0
+
+
+@settings(max_examples=6, deadline=None)
+@given(q=st.sampled_from([5, 7, 9]))
+def test_channel_load_matches_analytic_property(q):
+    """§II-B2 property: empirical mean MIN channel load == closed form
+    l = (2 N_r - k' - 2) p^2 / k' on every Slim Fly."""
+    topo = build_slimfly(q)
+    rt = build_routing(topo, use_pallas=False)
+    avg, _ = channel_load_uniform(rt)
+    expected = analytic_channel_load(topo.network_radix, topo.n_routers,
+                                     topo.p)
+    assert abs(avg - expected) / expected < 1e-9
+
+
+def test_degraded_dist_monotone_and_sentinel(sf5, mask10):
+    fe, rt_f = mask10
+    rt = build_routing(sf5, use_pallas=False)
+    assert (rt_f.dist >= rt.dist).all()          # failures never shorten
+    # cut one router completely off: its pairs must hit the sentinel
+    victim = 0
+    nbrs = np.nonzero(sf5.adj[victim])[0]
+    cut = np.stack([np.full_like(nbrs, victim), nbrs], axis=1)
+    rt_cut = build_routing(sf5, use_pallas=False, failed_edges=cut)
+    assert (rt_cut.dist[victim, 1:] == UNREACH).all()
+    assert (rt_cut.next_hop[victim, 1:] == -1).all()
+    assert not rt_cut.reachable[victim, 1]
+
+
+# -- degraded SimTables ------------------------------------------------------
+
+def test_degraded_tables_dead_ports_and_consistency(sf5, mask10):
+    fe, _ = mask10
+    healthy = SimTables.build(sf5)
+    deg = SimTables.build(sf5, failed_edges=fe)
+    assert deg.P == healthy.P and deg.nbr.shape == healthy.nbr.shape
+    # exactly the failed links became -1 pads, in both directions
+    assert ((healthy.nbr >= 0).sum() - (deg.nbr >= 0).sum()) == 2 * len(fe)
+    dead = set(map(tuple, np.sort(fe, axis=1)))
+    n = sf5.n_routers
+    for r in range(n):
+        for o in range(deg.P):
+            v_h, v_d = healthy.nbr[r, o], deg.nbr[r, o]
+            if v_h >= 0 and (min(r, v_h), max(r, v_h)) in dead:
+                assert v_d == -1
+            else:
+                assert v_d == v_h                # live ports keep their id
+    # port_toward only aims at live ports and makes distance progress
+    for r in range(n):
+        for t in range(n):
+            o = deg.port_toward[r, t]
+            if o >= 0:
+                v = deg.nbr[r, o]
+                assert v >= 0
+                assert deg.dist[v, t] == deg.dist[r, t] - 1
+
+
+def test_degraded_min_val_paths_deadlock_free(sf5, mask10):
+    """Acceptance: the MIN+VAL path set the engine uses on the degraded
+    fabric stays deadlock-free under hop-indexed VCs."""
+    fe, rt = mask10
+    n = sf5.n_routers
+    paths = [rt.min_path(s, d) for s in range(n) for d in range(n)
+             if s != d]
+    rng = np.random.default_rng(0)
+    for _ in range(300):
+        s, d, r = (int(x) for x in rng.integers(0, n, 3))
+        if rt.dist[s, r] < UNREACH and rt.dist[r, d] < UNREACH:
+            paths.append(valiant_path(rt, s, d, r))
+    assert is_deadlock_free(paths, n)
+
+
+# -- degraded engines --------------------------------------------------------
+
+def test_closed_loop_completes_on_degraded_fabric(sf5, mask10):
+    """Acceptance: ring all-reduce finishes with finite makespan on the
+    degraded SimTables, and no faster than on the healthy fabric."""
+    fe, _ = mask10
+    wl = ring_all_reduce(8, 2)
+    cfg = WorkloadSimConfig(mode="min", chunk=128)
+    healthy = run_workload(SimTables.build(sf5), wl, cfg)
+    degraded = run_workload(SimTables.build(sf5, failed_edges=fe), wl, cfg)
+    assert degraded.completed and np.isfinite(degraded.makespan)
+    assert degraded.makespan >= healthy.makespan
+    assert degraded.flits_delivered == int(wl.size.sum())
+
+
+def test_open_loop_modes_deliver_on_degraded_fabric(sf5, mask10):
+    fe, _ = mask10
+    tables = SimTables.build(sf5, failed_edges=fe)
+    for mode in ("min", "ugal_l", "val"):
+        r = simulate(tables, make_traffic(tables, "uniform"),
+                     SimConfig(injection_rate=0.05, cycles=300,
+                               warmup=100, mode=mode))
+        assert r.delivered > 0, mode
+        # flit conservation still holds on the degraded fabric
+        assert (np.cumsum(r.per_cycle_injected)
+                == np.cumsum(r.per_cycle_delivered)
+                + r.per_cycle_in_flight).all(), mode
+
+
+def test_transient_mask_ecmp_fallback_delivers(sf5, mask10):
+    """rebuild=False keeps stale routes; the engine's dead-port ECMP
+    fallback must still deliver traffic around the dead links."""
+    fe, _ = mask10
+    tables = SimTables.build(sf5, ecmp=True).with_failures(
+        fe[:3], rebuild=False)
+    assert (tables.nbr >= 0).sum() == 2 * (sf5.n_edges - 3)
+    r = simulate(tables, make_traffic(tables, "uniform"),
+                 SimConfig(injection_rate=0.05, cycles=300, warmup=100,
+                           mode="min"))
+    assert r.delivered > 0
+
+
+# -- degraded FabricModel ----------------------------------------------------
+
+def test_fabric_model_degrades_consistently(sf5, mask10):
+    fe, _ = mask10
+    healthy = FabricModel(sf5)
+    degraded = FabricModel(sf5, failed_edges=fe)
+    assert degraded.topo.n_edges == sf5.n_edges - len(fe)
+    group = np.arange(16)
+    h = healthy.estimate("all_reduce", 1 << 20, group)
+    d = degraded.estimate("all_reduce", 1 << 20, group)
+    # fewer links + longer hops can only slow the estimate down
+    for alg in ("ring", "direct"):
+        assert d[alg].time_s >= h[alg].time_s * (1 - 1e-12)
+        assert d[alg].mean_hops >= h[alg].mean_hops
+    # zero mask is the identity
+    same = FabricModel(sf5, failed_edges=np.zeros((0, 2), np.int32))
+    assert same.topo is sf5

@@ -58,6 +58,54 @@ def test_slimfly_beats_dragonfly_resilience():
     assert sf_r >= df_r
 
 
+def test_max_tolerated_stops_at_first_dip():
+    """Regression: a non-monotone sweep must NOT credit fractions beyond
+    the first sub-threshold dip (the seed returned 0.15 here)."""
+    sweep = {0.05: 1.0, 0.10: 0.2, 0.15: 0.8}
+    assert max_tolerated_fraction(sweep, threshold=0.5) == 0.05
+
+
+def test_max_tolerated_treats_missing_fractions_as_failed():
+    """resilience_sweep stops early at the first rate-0.0 fraction; the
+    absent tail must not (and cannot) be credited."""
+    truncated = {0.05: 1.0, 0.10: 0.6, 0.15: 0.0}   # 0.20+ never tested
+    assert max_tolerated_fraction(truncated) == 0.10
+    # all-surviving prefix still returns the largest tested fraction
+    assert max_tolerated_fraction({0.05: 1.0, 0.10: 0.9}) == 0.10
+
+
+def test_sweep_includes_breaking_fraction():
+    """The early-stop fraction itself (rate 0.0) is in the dict, so
+    consumers see where the sweep ended."""
+    topo = build_slimfly(5)
+    sweep = resilience_sweep(topo, "disconnect", n_samples=5, seed=1,
+                             fractions=np.array([0.05, 0.9, 0.95]))
+    assert sweep[0.9] == 0.0
+    assert 0.95 not in sweep
+
+
+def test_metric_baselines_lazy(monkeypatch):
+    """'disconnect' must not compute any APSP baseline; 'diameter' with
+    base_diameter given must not recompute it (seed demanded both)."""
+    import repro.core.resiliency as res
+
+    calls = {"n": 0}
+    orig = res._scipy_metrics
+
+    def counting(adj):
+        calls["n"] += 1
+        return orig(adj)
+
+    monkeypatch.setattr(res, "_scipy_metrics", counting)
+    topo = build_slimfly(5)
+    metric_after_failures(topo, 0.1, "disconnect", n_samples=3)
+    assert calls["n"] == 3                     # samples only, no baseline
+    calls["n"] = 0
+    metric_after_failures(topo, 0.1, "diameter", n_samples=3,
+                          base_diameter=2.0)
+    assert calls["n"] == 3                     # given baseline reused
+
+
 def test_diameter_metric_stricter_than_disconnect():
     topo = build_slimfly(7)
     dis = max_tolerated_fraction(
