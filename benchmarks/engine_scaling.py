@@ -1,0 +1,145 @@
+"""Engine scaling sweep + the persistent perf-regression benchmark.
+
+Sweeps the open-loop flit simulator over paper-relevant Slim Fly sizes
+(q = 5 .. 17 fast, + q = 25 under REPRO_FULL) and records steady-state
+cycles/sec, compile time, and peak memory per size into
+``BENCH_engine.json`` (schema: repro.bench.harness).  This file is the
+hot-path trajectory across PRs: CI uploads it as an artifact and gates
+on the q=5 number (``--check-regression``).
+
+Knobs follow the other benchmarks: REPRO_SMOKE=1 shrinks to q in
+{5, 7} with short runs (CI / test_benchmarks_smoke); REPRO_FULL=1 (or
+--full) extends to q=25.  REPRO_BENCH_OUT overrides the output path;
+without it, only a DIRECT `python -m benchmarks.engine_scaling`
+invocation writes the committed BENCH_engine.json baseline — runs via
+`benchmarks.run` or smoke mode write gitignored
+BENCH_engine.{local,smoke}.json so the CI gate's reference can't be
+clobbered by accident.
+
+CLI:
+  python -m benchmarks.engine_scaling              # refresh the baseline
+  python -m benchmarks.engine_scaling --check-regression BENCH_engine.json
+"""
+
+import argparse
+import os
+import sys
+
+from repro.bench import (bench_callable, check_regression, load_bench,
+                         write_bench)
+from repro.core import build_slimfly, slimfly_params
+from repro.sim import SimConfig, SimTables, make_traffic, simulate
+
+GATE_ENTRY = "engine/q5/ugal_l"
+GATE_METRIC = "cycles_per_sec"
+# cross-machine gate: the baseline json is written on one machine and
+# checked on another (CI runner), so the factor must stay coarse
+GATE_FACTOR = float(os.environ.get("REPRO_BENCH_GATE_FACTOR", "2.0"))
+
+
+def _bench_point(q: int, cycles: int, mode: str = "ugal_l",
+                 rate: float = 0.3, repeats: int = 2,
+                 measure_memory: bool = True):
+    """One steady-state measurement of the compiled open-loop scan."""
+    par = slimfly_params(q)
+    tables = SimTables.build(build_slimfly(q))
+    tr = make_traffic(tables, "uniform")
+    state = {"seed": 0, "last": None}
+
+    def call():
+        # seed is a traced operand: bumping it exercises the cached
+        # executable on fresh inputs without retracing
+        cfg = SimConfig(injection_rate=rate, cycles=cycles, warmup=0,
+                        mode=mode, seed=state["seed"])
+        state["seed"] += 1
+        state["last"] = simulate(tables, tr, cfg)
+
+    entry = bench_callable(
+        f"engine/q{q}/{mode}", call, repeats=repeats, cycles=cycles,
+        measure_memory=measure_memory,
+        meta=dict(q=q, n_routers=par["n_routers"],
+                  n_endpoints=par["n_endpoints"], kprime=par["kprime"],
+                  mode=mode, rate=rate))
+    entry.meta["delivered"] = int(state["last"].delivered)
+    return entry, state["last"]
+
+
+def run(fast: bool = True):
+    full = os.environ.get("REPRO_FULL", "0") == "1" or not fast
+    smoke = os.environ.get("REPRO_SMOKE", "0") == "1" and not full
+    # only a DELIBERATE baseline refresh (direct `python -m
+    # benchmarks.engine_scaling`, which routes through main()) writes
+    # the committed BENCH_engine.json; indirect runs (benchmarks.run,
+    # smoke) default to gitignored local files so a routine benchmark
+    # sweep on some other machine can never clobber the CI gate's
+    # reference numbers
+    default_out = ("BENCH_engine.smoke.json" if smoke
+                   else "BENCH_engine.local.json")
+    out_path = os.environ.get("REPRO_BENCH_OUT", default_out)
+
+    if smoke:
+        points = [(5, 250, 2), (7, 250, 1)]
+    elif full:
+        points = [(5, 2000, 3), (7, 2000, 2), (11, 2000, 2),
+                  (17, 4000, 1), (25, 2000, 1)]
+    else:
+        # acceptance shape: q=17 open loop, >= 2k cycles, in fast mode
+        points = [(5, 2000, 3), (7, 2000, 2), (11, 2000, 2), (17, 2000, 1)]
+
+    entries, rows = [], []
+    for q, cycles, repeats in points:
+        entry, res = _bench_point(q, cycles, repeats=repeats,
+                                  measure_memory=(q <= 11))
+        entries.append(entry)
+        rows.append(dict(
+            name=f"engine_scaling/q{q}",
+            cycles=cycles,
+            n_routers=entry.meta["n_routers"],
+            n_endpoints=entry.meta["n_endpoints"],
+            compile_s=round(entry.compile_s, 2),
+            accepted=round(res.accepted_load, 4),
+            derived=round(entry.cycles_per_sec, 2)))   # cycles/sec
+
+    write_bench(out_path, "engine_scaling", entries,
+                extra_meta={"modes": ["ugal_l"],
+                            "smoke": smoke, "full": full})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--check-regression", metavar="BASELINE", default=None,
+                    help="compare a fresh q=5 run against BASELINE and "
+                         "exit 1 on a >GATE_FACTOR cycles/sec regression")
+    args = ap.parse_args()
+
+    if args.check_regression:
+        try:
+            baseline = load_bench(args.check_regression)
+        except FileNotFoundError:
+            # a missing baseline file must not brick CI (same grace as
+            # a missing entry) — the sweep step regenerates it
+            print(f"no baseline file {args.check_regression}; skipping")
+            sys.exit(0)
+        entry, _ = _bench_point(5, cycles=300, repeats=3,
+                                measure_memory=False)
+        ok, msg = check_regression(baseline, GATE_ENTRY, GATE_METRIC,
+                                   entry.cycles_per_sec,
+                                   factor=GATE_FACTOR,
+                                   higher_is_better=True)
+        print(msg)
+        sys.exit(0 if ok else 1)
+
+    if args.full:
+        os.environ["REPRO_FULL"] = "1"
+    # direct non-smoke CLI invocation = deliberate baseline refresh;
+    # smoke runs keep run()'s gitignored default even when direct
+    if os.environ.get("REPRO_SMOKE", "0") != "1" or args.full:
+        os.environ.setdefault("REPRO_BENCH_OUT", "BENCH_engine.json")
+    for row in run(fast=not args.full):
+        print(",".join(f"{k}={v}" for k, v in row.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,11 @@
 """Fig 8a: router buffer-size study (worst-case traffic); Fig 8b-e:
-oversubscribed Slim Fly variants."""
+oversubscribed Slim Fly variants.
+
+Knobs (same contract as every other sim benchmark):
+  REPRO_SMOKE=1  pipeline-exercising minimum (CI / test_benchmarks_smoke)
+  REPRO_FULL=1   paper-scale: q=11 network, long runs, full sweeps
+  default fast   q=5, medium runs
+"""
 
 import os
 
@@ -8,27 +14,31 @@ from repro.sim import SimConfig, SimTables, make_traffic, simulate
 
 
 def run(fast: bool = True):
-    rows = []
-    q = 5
+    full = os.environ.get("REPRO_FULL", "0") == "1" or not fast
     # REPRO_SMOKE=1: pipeline-exercising minimum (CI / test_benchmarks_smoke)
-    smoke = os.environ.get("REPRO_SMOKE", "0") == "1" and fast
-    cycles, warmup = ((250, 80) if smoke else (600, 200)) if fast \
-        else (2000, 700)
+    smoke = os.environ.get("REPRO_SMOKE", "0") == "1" and not full
+    q = 11 if full else 5
+    cycles, warmup = (2000, 700) if full else (
+        (250, 80) if smoke else (600, 200))
 
+    rows = []
     # --- 8a: buffer sizes (total flits/port = 4 VCs * q_net)
     tables = SimTables.build(build_slimfly(q))
     wc = make_traffic(tables, "worstcase_sf")
-    for q_net in ([4, 64] if smoke else
-                  [4, 16, 64] if fast else [2, 4, 8, 16, 32, 64]):
+    buf_sweep = ([4, 64] if smoke else
+                 [4, 16, 64] if not full else [2, 4, 8, 16, 32, 64])
+    for q_net in buf_sweep:
         r = simulate(tables, wc, SimConfig(
             injection_rate=0.4, cycles=cycles, warmup=warmup,
             mode="ugal_l", q_net=q_net))
         rows.append(dict(name=f"fig8a/buffers/{4*q_net}flits",
+                         q=q,
                          latency=round(r.avg_latency, 2),
                          derived=round(r.accepted_load, 4)))
 
     # --- 8b-e: oversubscription (p > balanced)
-    for p in ([4, 6] if smoke else [4, 5, 6] if fast else [4, 5, 6, 7]):
+    p_sweep = [4, 6] if smoke else [4, 5, 6] if not full else [9, 11, 13, 15]
+    for p in p_sweep:
         topo = build_slimfly(q, p=p)
         t = SimTables.build(topo)
         uni = make_traffic(t, "uniform")

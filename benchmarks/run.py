@@ -18,6 +18,7 @@ MODULES = [
     "fig6_perf",
     "workloads_jct",
     "fig8_buffers",
+    "engine_scaling",
     "table4_cost",
     "topology_collectives",
     "roofline_bench",

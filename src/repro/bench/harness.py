@@ -1,0 +1,207 @@
+"""Timing, memory, and JSON persistence for ``BENCH_*.json`` files.
+
+Methodology:
+
+- `bench_callable` separates the first call (trace + compile + device
+  warmup, with the memory probe bracketing it) from the steady-state
+  measurement: it times `repeats` further calls and reports min/mean
+  wall seconds.  The min is the regression-gate number — it is the
+  least noisy estimator on shared CI machines; the compile time is
+  reported separately because a tracing regression is a real
+  regression too.
+- `peak_memory_bytes` prefers the JAX device allocator's
+  ``peak_bytes_in_use`` (TPU/GPU); on CPU hosts, where the allocator
+  exposes no stats, it falls back to `tracemalloc` around one call.
+  tracemalloc only sees host-side Python allocations (device buffers
+  are invisible to it), so that number is a coarse host-traffic proxy
+  — which probe produced an entry is recorded in its ``mem_probe``
+  field so trajectories never silently mix the two.
+
+Schema (``BENCH_*.json``)::
+
+    {"schema": 1, "suite": "engine_scaling", "backend": "cpu",
+     "entries": {"<name>": {"wall_s": .., "compile_s": ..,
+                            "cycles": .., "cycles_per_sec": ..,
+                            "peak_mem_bytes": .., "mem_probe": "..",
+                            "meta": {...}}}}
+
+`check_regression` compares one metric of one entry between a baseline
+file and fresh numbers with a multiplicative tolerance, for the CI
+gate (``benchmarks/engine_scaling.py --check-regression``).  Machine
+speeds differ between the laptop that wrote the baseline and the CI
+runner, so gate factors must stay coarse (the default CI gate is 2x).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+import tracemalloc
+from typing import Callable, Optional
+
+__all__ = ["BenchEntry", "bench_callable", "peak_memory_bytes",
+           "write_bench", "load_bench", "check_regression"]
+
+SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass
+class BenchEntry:
+    name: str
+    wall_s: float                       # steady-state min wall seconds/call
+    wall_mean_s: float                  # steady-state mean
+    compile_s: float                    # first call (trace+compile+run)
+    repeats: int
+    cycles: Optional[int] = None        # simulated cycles per call
+    peak_mem_bytes: Optional[int] = None
+    # device | tracemalloc | tracemalloc-nested | none ("none" also
+    # covers a device high-water mark hidden by an earlier workload)
+    mem_probe: str = "none"
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def cycles_per_sec(self) -> Optional[float]:
+        if self.cycles is None or self.wall_s <= 0:
+            return None
+        return self.cycles / self.wall_s
+
+    def to_json(self) -> dict:
+        d = {
+            "wall_s": self.wall_s,
+            "wall_mean_s": self.wall_mean_s,
+            "compile_s": self.compile_s,
+            "repeats": self.repeats,
+            "peak_mem_bytes": self.peak_mem_bytes,
+            "mem_probe": self.mem_probe,
+            "meta": self.meta,
+        }
+        if self.cycles is not None:
+            d["cycles"] = self.cycles
+            d["cycles_per_sec"] = self.cycles_per_sec
+        return d
+
+
+def peak_memory_bytes(fn: Callable[[], object]) -> tuple:
+    """(peak_bytes, probe_kind) for one invocation of `fn`.
+
+    Uses the device allocator's peak counter when the backend exposes
+    one (delta vs the pre-call peak), else tracemalloc.
+    """
+    import jax
+
+    dev = jax.devices()[0]
+    stats = getattr(dev, "memory_stats", lambda: None)()
+    if stats and "peak_bytes_in_use" in stats:
+        before = dev.memory_stats()["peak_bytes_in_use"]
+        fn()
+        after = dev.memory_stats()["peak_bytes_in_use"]
+        if after > before:
+            return int(after - before), "device"
+        # the allocator peak is a monotone high-water mark: an earlier,
+        # larger workload in this process hides this call entirely —
+        # record "no reading" rather than a misleading 0
+        return None, "none"
+    if tracemalloc.is_tracing():
+        # don't clobber an enclosing session's peak with reset_peak();
+        # approximate from the running counters and label the probe so
+        # trajectories never silently mix it with clean readings (a
+        # stale historical peak can dominate peak1 here)
+        cur0, _ = tracemalloc.get_traced_memory()
+        fn()
+        _, peak1 = tracemalloc.get_traced_memory()
+        return int(max(peak1 - cur0, 0)), "tracemalloc-nested"
+    tracemalloc.start()
+    try:
+        fn()
+        _, peak = tracemalloc.get_traced_memory()
+    finally:
+        tracemalloc.stop()
+    return int(peak), "tracemalloc"
+
+
+def bench_callable(name: str, fn: Callable[[], object], *,
+                   repeats: int = 3, cycles: Optional[int] = None,
+                   measure_memory: bool = True,
+                   meta: Optional[dict] = None) -> BenchEntry:
+    """Compile-vs-steady-state timing of `fn` (which must block until
+    the result is materialised — call block_until_ready/np.asarray
+    inside).
+
+    The memory probe brackets the FIRST call: on allocator-stats
+    backends the peak counter is a monotone high-water mark, so only
+    the first execution moves it — probing a later call would read a
+    zero delta.  When the probe is tracemalloc, `compile_s` includes
+    its tracing overhead (both are coarse diagnostics, not gate
+    metrics)."""
+    t0 = time.perf_counter()
+    peak, probe = (None, "none")
+    if measure_memory:
+        peak, probe = peak_memory_bytes(fn)  # trace + compile + warmup
+    else:
+        fn()
+    compile_s = time.perf_counter() - t0
+
+    walls = []
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        fn()
+        walls.append(time.perf_counter() - t0)
+
+    return BenchEntry(name=name, wall_s=min(walls),
+                      wall_mean_s=sum(walls) / len(walls),
+                      compile_s=compile_s, repeats=len(walls),
+                      cycles=cycles, peak_mem_bytes=peak, mem_probe=probe,
+                      meta=dict(meta or {}))
+
+
+def write_bench(path: str, suite: str, entries: list, *,
+                extra_meta: Optional[dict] = None) -> dict:
+    """Serialise BenchEntry list to the BENCH_*.json schema."""
+    import jax
+
+    doc = {
+        "schema": SCHEMA_VERSION,
+        "suite": suite,
+        "backend": jax.default_backend(),
+        "meta": dict(extra_meta or {}),
+        "entries": {e.name: e.to_json() for e in entries},
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return doc
+
+
+def load_bench(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc.get("schema") == SCHEMA_VERSION, \
+        f"unknown bench schema in {path}: {doc.get('schema')}"
+    return doc
+
+
+def check_regression(baseline: dict, entry_name: str, metric: str,
+                     current: float, *, factor: float = 2.0,
+                     higher_is_better: bool = True) -> tuple:
+    """(ok, message) comparing `current` against the baseline metric.
+
+    higher_is_better=True (e.g. cycles_per_sec): fail when current <
+    baseline / factor.  Otherwise (e.g. wall_s): fail when current >
+    baseline * factor.  A missing baseline entry passes with a notice —
+    new benchmarks must not brick CI.
+    """
+    ent = baseline.get("entries", {}).get(entry_name)
+    if ent is None or ent.get(metric) is None:
+        return True, f"no baseline for {entry_name}.{metric}; skipping"
+    base = float(ent[metric])
+    if higher_is_better:
+        ok = current >= base / factor
+        rel = current / base if base else float("inf")
+    else:
+        ok = current <= base * factor
+        rel = base / current if current else float("inf")
+    msg = (f"{entry_name}.{metric}: current={current:.4g} "
+           f"baseline={base:.4g} ({rel:.2f}x, gate {factor}x) "
+           f"{'OK' if ok else 'REGRESSION'}")
+    return ok, msg

@@ -1,11 +1,23 @@
-"""Pure-jnp oracles for every Pallas kernel in this package."""
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+The switch-allocation and UGAL-scoring oracles are written as
+row-independent math helpers (`_alloc_rounds_math`, `_ugal_score_math`)
+shared verbatim with the Pallas kernels in `alloc.py`: the kernel runs
+the same function on a block of rows, so ref and pallas paths agree
+bit-for-bit by construction (asserted end-to-end by
+tests/test_engine_scaling.py).
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
-__all__ = ["minplus_ref", "apsp_ref", "decode_attention_ref"]
+__all__ = [
+    "minplus_ref", "apsp_ref", "decode_attention_ref",
+    "alloc_rounds_ref", "ugal_select_ref",
+]
 
 
 def minplus_ref(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -44,3 +56,212 @@ def decode_attention_ref(q, k, v, scale: float | None = None, length=None,
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgs,bhsd->bhgd", w, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------- switch --
+# W-round rotating-priority switch allocation (repro.sim.engine, DESIGN.md
+# §5/§9).  All arrays are router-major: every row is one router, so the
+# math below is row-local and a Pallas grid can partition rows freely.
+#
+# Priority note: the seed engine ranked channel requests by
+# ``rot * R + qidx`` with ``rot = (qidx + cycle*7919 + w*131) % R`` — at
+# paper scale (q=17, R = 65314 request queues) that product reaches
+# ~4.3e9 and silently wraps int32.  Because qidx -> rot is a bijection
+# (a shift mod R), all rot values are distinct and ``argmin(rot)``
+# selects the same winner as ``argmin(rot * R + qidx)`` did where the
+# latter was well-defined; we therefore rank by ``rot`` alone, which
+# stays < R.  The additive term cycle*7919 + qidx + w*131 itself stays
+# below int32 for cycle <= 200k (the closed-loop max) and R <= 2^18
+# (q=25), asserted in tests/test_engine_scaling.py.
+
+
+# Requests of a router are indexed 0..K-1 with K = PV + PE (net queues
+# then source queues).  Channel arbitration packs (priority, request
+# index) into one int32 — KSHIFT must exceed K and R * KSHIFT must stay
+# below 2^31; q=25 (R = 208750, K = 167) leaves ~40x headroom.
+KSHIFT = 256
+
+
+def _alloc_rounds_math(cycle, out_n, ej_n, sp_n, cnt_n,
+                       out_s, ej_s, sp_s, cnt_s, epr, row0,
+                       *, W: int, P: int, V: int, PE: int,
+                       p_budget: int, NQ: int, R: int,
+                       use_gather: bool = True):
+    """W rounds of matching for a block of routers.
+
+    Shapes (B = routers in this block, PV = P*V; the W axis is LAST so
+    the engine's [N,P,V,W] desire arrays reshape in without copies):
+      out_n/ej_n/sp_n: [B, PV, W] desired out port / eject flag / space
+      cnt_n:           [B, PV]    queue depth at cycle start (0 = dead port)
+      out_s/ej_s/sp_s: [B, PE, W] the router's endpoint (source) queues
+      cnt_s:           [B, PE]
+      epr:             [B, 1]     endpoint-block index of the router (-1)
+      row0:            scalar     global id of row 0 (Pallas block offset)
+
+    Returns (chan_slot_net [B, PV], ej_slot_net [B, PV],
+             chan_slot_src [B, PE], ej_slot_src [B, PE],
+             win_req [B, P]): the window offset granted per queue (-1 =
+    no grant) split by grant kind, plus the winning request index (into
+    the router's K requests; -1 = idle) per output channel — each
+    channel carries at most one packet per cycle, so one [B, P] index
+    array captures every arrival (the engine turns it into dense
+    per-(router, port) gathers instead of a scatter).
+    """
+    B = cnt_n.shape[0]
+    PV = P * V
+    K = PV + PE
+    assert K < KSHIFT, f"request index overflows KSHIFT lanes: {K}"
+    i32 = jnp.int32
+    intmax = jnp.iinfo(jnp.int32).max
+
+    col_pv = lax.broadcasted_iota(i32, (B, PV), 1)
+    col_pe = lax.broadcasted_iota(i32, (B, PE), 1)
+    col_k = lax.broadcasted_iota(i32, (B, K), 1)
+    rows = row0 + lax.broadcasted_iota(i32, (B, 1), 0)
+    qidx_n = rows * PV + col_pv                      # global queue ids
+    qidx_s = NQ + epr * PE + col_pe                  # (junk when epr < 0:
+    chan_ids = lax.broadcasted_iota(i32, (B, P, 1), 1)  # masked by cnt==0)
+
+    s_rot = cycle % PV                               # ejection rotation
+    net_first = (cycle % 2) == 0
+    base = cycle * jnp.int32(7919)
+
+    granted_n = jnp.zeros((B, PV), bool)
+    granted_s = jnp.zeros((B, PE), bool)
+    chan_taken = jnp.zeros((B, P), bool)
+    budget = jnp.full((B, 1), p_budget, i32)
+    cs_n = jnp.full((B, PV), -1, i32)
+    es_n = jnp.full((B, PV), -1, i32)
+    cs_s = jnp.full((B, PE), -1, i32)
+    es_s = jnp.full((B, PE), -1, i32)
+    win_req = jnp.full((B, P), -1, i32)
+
+    # hoisted across rounds: request -> channel one-hot (out ports are
+    # fixed per window slot) and the rotation base priorities
+    out_kw = jnp.concatenate([out_n, out_s], axis=1)     # [B, K, W]
+    match_all = out_kw[:, None, :, :] == chan_ids[..., None]  # [B,P,K,W]
+    qidx_k = jnp.concatenate([qidx_n, qidx_s], axis=1)
+    rot0 = (qidx_k + base) % R                           # [B, K]
+
+    for w in range(W):
+        vn = (cnt_n > w) & ~granted_n
+        vs = (cnt_s > w) & ~granted_s
+        ejn = ej_n[:, :, w] != 0
+        ejs = ej_s[:, :, w] != 0
+        spn = sp_n[:, :, w] != 0
+        sps = sp_s[:, :, w] != 0
+
+        # --- ejection grants: rotating rank over the router's net
+        # queues (start column rotates with the cycle), endpoints ranked
+        # before/after by cycle parity, against the shared budget of p
+        # ejection ports.  rank = exclusive prefix count in rotated
+        # order, computed in closed form instead of roll+cumsum+roll.
+        mn = (vn & ejn).astype(i32)
+        ms = (vs & ejs).astype(i32)
+        cn = jnp.cumsum(mn, axis=1) - mn             # exclusive prefix
+        sn = mn.sum(axis=1, keepdims=True)
+        c_at = jnp.sum(jnp.where(col_pv == s_rot, cn, 0), axis=1,
+                       keepdims=True)
+        rank_n = cn - c_at + jnp.where(col_pv < s_rot, sn, 0)
+        cs_pre = jnp.cumsum(ms, axis=1) - ms
+        ss = ms.sum(axis=1, keepdims=True)
+        rank_nf = rank_n + jnp.where(net_first, 0, ss)
+        rank_sf = cs_pre + jnp.where(net_first, sn, 0)
+        g_ej_n = (mn > 0) & (rank_nf < budget)
+        g_ej_s = (ms > 0) & (rank_sf < budget)
+        budget = (budget - g_ej_n.sum(axis=1, keepdims=True)
+                  - g_ej_s.sum(axis=1, keepdims=True))
+
+        # --- channel grants: lowest rotating priority among eligible
+        # requests per output channel; one winner per channel per cycle.
+        # Priorities are distinct (qidx -> rot is a bijection mod R), so
+        # packing (rot, request index) into rot*KSHIFT + idx lets one
+        # min-reduction produce both the winner's priority and its
+        # identity; a channel with any eligible request always grants.
+        elig_n = vn & ~ejn & spn
+        elig_s = vs & ~ejs & sps
+        cmb = ((rot0 + jnp.int32(w * 131)) % R) * KSHIFT + col_k  # [B, K]
+        out_all = out_kw[:, :, w]
+        elig = jnp.concatenate([elig_n, elig_s], axis=1)
+        live = (match_all[..., w]
+                & ~chan_taken[:, :, None] & elig[:, None, :])  # [B, P, K]
+        cmin = jnp.min(jnp.where(live, cmb[:, None, :], intmax),
+                       axis=2)                       # [B, P]
+        won = cmin < intmax
+        if use_gather:
+            # per-request winner test via a [B, K] row gather of the
+            # channel minima — cheap on CPU/GPU.  cmb values are
+            # distinct across requests, so equality alone identifies
+            # the winner (taken/ineligible rows can never match).
+            cmin_at = jnp.take_along_axis(cmin, jnp.maximum(out_all, 0),
+                                          axis=1)
+            win_all = elig & (out_all >= 0) & (cmb == cmin_at)
+        else:
+            # gather-free form for the TPU kernel (identical winners:
+            # cmb values are distinct, so == picks exactly one)
+            win_all = (live & (cmb[:, None, :] == cmin[:, :, None])
+                       ).any(axis=1)
+        win_n, win_s = win_all[:, :PV], win_all[:, PV:]
+        chan_taken = chan_taken | won
+        win_req = jnp.where(won, cmin % KSHIFT, win_req)
+
+        granted_n = granted_n | win_n | g_ej_n
+        granted_s = granted_s | win_s | g_ej_s
+        cs_n = jnp.where(win_n, w, cs_n)
+        es_n = jnp.where(g_ej_n, w, es_n)
+        cs_s = jnp.where(win_s, w, cs_s)
+        es_s = jnp.where(g_ej_s, w, es_s)
+
+    return cs_n, es_n, cs_s, es_s, win_req
+
+
+def alloc_rounds_ref(cycle, out_net, ej_net, space_net, count_net,
+                     out_src, ej_src, space_src, count_src, epr_index,
+                     *, W: int, P: int, V: int, PE: int, p_budget: int,
+                     NQ: int, R: int):
+    """Full-array oracle for the W-round allocation kernel."""
+    return _alloc_rounds_math(
+        jnp.asarray(cycle, jnp.int32), out_net, ej_net, space_net,
+        count_net, out_src, ej_src, space_src, count_src,
+        epr_index.reshape(-1, 1), jnp.int32(0),
+        W=W, P=P, V=V, PE=PE, p_budget=p_budget, NQ=NQ, R=R,
+        use_gather=True)
+
+
+# ------------------------------------------------------------ UGAL score --
+def _ugal_score_math(len_min, len_val, occ_min, occ_val,
+                     *, ugal_g: bool, unreach: int, big: int):
+    """Score MIN vs the C VAL candidates and pick the best (first-min).
+
+    len_min [E, 1] / len_val [E, C]: path lengths (int32, >= unreach =
+    dead); occ_min/occ_val: the matching pre-gathered occupancy terms
+    (first-hop queue for UGAL-L, whole-path sums for UGAL-G, already
+    OCC_CAP-clamped by the engine).  Returns [E, 1] int32 index into
+    the [MIN, cand_0, .., cand_{C-1}] row (0 = MIN; ties go to MIN,
+    matching argmin-first).
+    """
+    if ugal_g:
+        sm = occ_min + len_min
+        sv = occ_val + len_val
+    else:
+        sm = len_min * occ_min
+        sv = len_val * occ_val
+    sm = jnp.where(len_min < unreach, sm, big)
+    sv = jnp.where(len_val < unreach, sv, big)
+    scores = jnp.concatenate([sm, sv], axis=1)       # [E, 1 + C]
+    m = jnp.min(scores, axis=1, keepdims=True)
+    idx = lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    first = jnp.min(jnp.where(scores == m, idx, scores.shape[1]),
+                    axis=1, keepdims=True)
+    return first.astype(jnp.int32)
+
+
+def ugal_select_ref(len_min, len_val, occ_min, occ_val,
+                    *, ugal_g: bool, unreach: int, big: int):
+    """Full-array oracle for the UGAL candidate-scoring kernel.
+
+    len_min/occ_min: [E]; len_val/occ_val: [E, C].  Returns best [E].
+    """
+    return _ugal_score_math(
+        len_min[:, None], len_val, occ_min[:, None], occ_val,
+        ugal_g=ugal_g, unreach=unreach, big=big)[:, 0]

@@ -27,12 +27,31 @@ and in what they fold over ejection grants:
     latency/throughput methodology;
   - `repro.sim.workloads.closed_loop`: dependency-triggered multi-flit
     message injection for closed-loop workload (JCT) runs; its packet
-    records carry a sixth MSG field that the core passes through
-    untouched.
+    records carry an extra bit-packed MSG field that the core passes
+    through untouched.
 
-State layout: packet records are int32 [..., F] with fields (dst_router,
-inter, inject_cycle, hops, phase[, msg]).  Network queues [N, P, V, Qn,
-F] as circular FIFOs with (head, count); source queues [N_ep, Qs, F].
+Paper-scale hot path (DESIGN.md §9).  Queue state is bit-packed
+(`repro.sim.packed`): every flit record is 3 int32 words and the big
+routing tables are int16 on device.  A cycle gathers ONE W-slot window
+of every queue up front, computes route desires for all W slots at
+once, and hands the router-local conflict resolution to
+`repro.kernels.alloc_rounds` (Pallas kernel or its bit-identical jnp
+oracle, selected by ``SimConfig.kernel_path``); UGAL/VAL candidate
+scoring likewise runs through `repro.kernels.ugal_select`.  Two
+engine-level identities make the single-gather structure exact (the
+grants are bit-identical to a per-round re-gather):
+
+  1. arrivals land at offsets >= the cycle-start queue depth, and a
+     window slot is only valid below that depth — this cycle's
+     arrivals can never be granted this cycle;
+  2. a downstream input queue (router, port) receives at most one
+     packet per cycle, always via its unique upstream channel, and
+     `chan_taken` blocks that channel after its win — so the
+     backpressure (space) check against cycle-start depths is exact.
+
+State layout: packed records [..., PK=3]; network queues [N, P, V, Qn,
+PK] as shift-down FIFOs (head at slot 0) with a count array; source
+queues [N_ep, Qs, PK].
 
 `simulate` compiles one `(rate, key) ->` scan per (tables, traffic,
 static-config) signature and caches it, so a load sweep (fig6) traces
@@ -50,12 +69,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.routing import UNREACH
+from ..kernels import alloc_rounds, ugal_select
+from .packed import (MAX_ROUTERS, PK, bump_hops_word, pack_record, pk_dst,
+                     pk_hops, pk_inter, pk_phase, pk_time)
 from .tables import SimTables
 from .traffic import Traffic
 
 __all__ = ["SimConfig", "SimResult", "SwitchCore", "simulate"]
 
-DST, INTER, TIME, HOPS, PHASE, MSG = range(6)
 BIG = jnp.int32(1 << 30)
 # occupancy values entering UGAL scores are clamped here so that the
 # dead-port sentinel (occupancy() returns BIG for nbr < 0) cannot
@@ -76,11 +97,15 @@ class SimConfig:
     n_val_candidates: int = 4         # §IV-C: 4 works best
     lookahead: int = 4                # allocation window (HOL mitigation)
     seed: int = 0
+    # hot-path implementation: 'auto' = Pallas kernels on TPU, jnp
+    # oracles elsewhere; 'ref' / 'pallas' force a path (the kernels are
+    # bit-identical — tests/test_engine_scaling.py)
+    kernel_path: str = "auto"
 
     def static_key(self) -> tuple:
         """Fields that shape the compiled graph (rate/seed are traced)."""
         return (self.cycles, self.vcs, self.q_net, self.q_src, self.mode,
-                self.n_val_candidates, self.lookahead)
+                self.n_val_candidates, self.lookahead, self.kernel_path)
 
 
 @dataclasses.dataclass
@@ -115,41 +140,54 @@ class SwitchCore:
     per-flit `route_decision`, and `alloc` (W rounds of
     rotating-priority matching with immediate arrivals, followed by
     window compaction and dequeues).  Engines inject into the source
-    queues themselves and pass an `eject_fold(acc, grant_ej, req_pkt,
-    cycle)` callback so open-loop stats (delivered/latency) and
-    closed-loop stats (per-message flit counts) use the same matching
-    machinery.  `n_fields` is the packet record width: 5 for open-loop,
-    6 (with a trailing MSG id) for closed-loop; the core only
-    interprets fields 0..4 and carries the rest verbatim.
+    queues themselves and pass an `eject_fold(acc, grant_net [N,P,V]
+    bool, grant_src [n_ep] bool, pkt_net [N,P,V,PK], pkt_src [n_ep,PK],
+    cycle)` callback, called once per allocation round with that
+    round's ejection grants and the (packed) granted head-window
+    records, so open-loop stats (delivered/latency) and closed-loop
+    stats (per-message flit counts) use the same matching machinery.
+    The fold reads fields through `repro.sim.packed` accessors — no
+    concat or unpack boundary sits on the hot path.
     """
 
-    def __init__(self, tables: SimTables, cfg: SimConfig,
-                 n_fields: int = 5):
+    def __init__(self, tables: SimTables, cfg: SimConfig):
         self.tables = tables
-        self.F = n_fields
         N, P, V = tables.n_routers, tables.P, cfg.vcs
+        assert N < MAX_ROUTERS, f"router ids overflow packed records: {N}"
         self.N, self.P, self.V = N, P, V
         self.Qn, self.Qs = cfg.q_net, cfg.q_src
         self.n_ep = tables.n_endpoints
-        self.p = tables.p
+        self.p = int(tables.p)
         self.W = cfg.lookahead
         self.mode = cfg.mode
         self.C = cfg.n_val_candidates
+        kp = cfg.kernel_path
+        assert kp in ("auto", "ref", "pallas"), kp
+        self.use_pallas = (kp == "pallas"
+                           or (kp == "auto"
+                               and jax.default_backend() == "tpu"))
 
-        self.nbr = jnp.asarray(tables.nbr)
-        self.rev_port = jnp.asarray(tables.rev_port)
-        self.port_toward = jnp.asarray(tables.port_toward)
-        self.dist = jnp.asarray(tables.dist.astype(np.int32))
-        self.ep_router = jnp.asarray(tables.ep_router)
+        # narrow on-device tables (DESIGN.md §9): the O(N^2) tables are
+        # int16 (ids < 2^15 asserted above) and gathered values are
+        # widened to int32 at their use sites
+        self.nbr = jnp.asarray(tables.nbr.astype(np.int32))
+        self.rev_port = jnp.asarray(tables.rev_port.astype(np.int32))
+        self.port_toward = jnp.asarray(tables.port_toward.astype(np.int16))
+        self.dist = jnp.asarray(tables.dist.astype(np.int16))
+        self.ep_router = jnp.asarray(tables.ep_router.astype(np.int32))
         self.has_ecmp = tables.ecmp_ports is not None
-        self.ecmp_ports = (jnp.asarray(tables.ecmp_ports)
+        self.ecmp_ports = (jnp.asarray(tables.ecmp_ports.astype(np.int16))
                            if self.has_ecmp else None)
 
         # endpoint-router blocks for ejection ranking: endpoints are
         # sorted by router and each endpoint-router has exactly p
         # endpoints.
-        self.ep_block_router = jnp.asarray(tables.ep_router[::self.p])
+        ebr = tables.ep_router[::self.p].astype(np.int32)
+        self.ep_block_router = jnp.asarray(ebr)
         self.n_epr = self.n_ep // self.p
+        epr_index = np.full((N,), -1, dtype=np.int32)
+        epr_index[ebr] = np.arange(self.n_epr, dtype=np.int32)
+        self.epr_index = jnp.asarray(epr_index)
 
         self.unreach = jnp.int32(int(UNREACH))
 
@@ -157,20 +195,20 @@ class SwitchCore:
         self.R = self.NQ + self.n_ep
         self.eids = jnp.arange(self.n_ep)
         self.routers_n = jnp.arange(N)[:, None, None]          # [N,1,1]
-        self.req_r_const = jnp.concatenate(
-            [jnp.broadcast_to(self.routers_n, (N, P, V)).reshape(-1),
-             self.ep_router])
 
     # -- queue state ---------------------------------------------------------
+    # Queues are shift-down FIFOs: the head packet always sits at slot 0
+    # and slots 0..count-1 are occupied, so the W-slot allocation window
+    # is a STATIC slice and dequeue+compaction is a static-shift select
+    # — no circular-head gathers or scatters anywhere on the flit
+    # arrays (DESIGN.md §9).  The abstract queue sequence is identical
+    # to the seed's circular FIFOs, so grants are bit-identical.
     def init_queues(self) -> tuple:
-        """(nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count) zeros."""
-        N, P, V, Qn, Qs, F = (self.N, self.P, self.V, self.Qn, self.Qs,
-                              self.F)
-        return (jnp.zeros((N, P, V, Qn, F), jnp.int32),
+        """(nq_pkt, nq_count, sq_pkt, sq_count) zeros."""
+        N, P, V, Qn, Qs = self.N, self.P, self.V, self.Qn, self.Qs
+        return (jnp.zeros((N, P, V, Qn, PK), jnp.int32),
                 jnp.zeros((N, P, V), jnp.int32),
-                jnp.zeros((N, P, V), jnp.int32),
-                jnp.zeros((self.n_ep, Qs, F), jnp.int32),
-                jnp.zeros((self.n_ep,), jnp.int32),
+                jnp.zeros((self.n_ep, Qs, PK), jnp.int32),
                 jnp.zeros((self.n_ep,), jnp.int32))
 
     def occupancy(self, nq_count):
@@ -180,24 +218,27 @@ class SwitchCore:
         occ = nq_count[safe_nbr, safe_rev, :].sum(-1)          # [N, P]
         return jnp.where(self.nbr >= 0, occ, BIG)
 
-    def inject(self, sq_pkt, sq_head, sq_count, want, new_pkt):
+    def inject(self, sq_pkt, sq_count, want, new_pkt):
         """Masked tail enqueue into the per-endpoint source FIFOs.
 
         `want` must already account for backpressure (`sq_count < Qs`);
-        both engines share these mechanics by construction.
+        both engines share these mechanics by construction.  Masked
+        dense write: XLA CPU scatters serialise per row, a [n_ep, Qs]
+        select does not (DESIGN.md §9).
         """
-        tail = (sq_head + sq_count) % self.Qs
-        cur = sq_pkt[self.eids, tail]
-        sq_pkt = sq_pkt.at[self.eids, tail].set(
-            jnp.where(want[:, None], new_pkt, cur))
+        ins = want[:, None] & (jnp.arange(self.Qs) == sq_count[:, None])
+        sq_pkt = jnp.where(ins[..., None], new_pkt[:, None, :], sq_pkt)
         return sq_pkt, sq_count + want.astype(jnp.int32)
 
     # -- routing -------------------------------------------------------------
+    def _dist32(self, s, t):
+        return self.dist[s, t].astype(jnp.int32)
+
     def route_decision(self, dst_r, occ, key):
         """Per-endpoint injection-time path choice -> (inter, phase)."""
         mode, C, N, n_ep = self.mode, self.C, self.N, self.n_ep
         src_r = self.ep_router
-        dist, port_toward, nbr = self.dist, self.port_toward, self.nbr
+        port_toward, nbr = self.port_toward, self.nbr
         if mode in ("min", "ecmp"):
             return dst_r, jnp.ones_like(dst_r)
         if mode == "val":
@@ -207,7 +248,8 @@ class SwitchCore:
                 i = jnp.where(bad, (i + bump) % N, i)
             # degraded fabrics: only detour via intermediates that can
             # still reach both endpoints; dead draws fall back to MIN
-            live = (dist[src_r, i] + dist[i, dst_r]) < self.unreach
+            live = (self._dist32(src_r, i)
+                    + self._dist32(i, dst_r)) < self.unreach
             return (jnp.where(live, i, dst_r),
                     (~live).astype(jnp.int32))
 
@@ -218,50 +260,49 @@ class SwitchCore:
             cands = jnp.where(bad, (cands + bump) % N, cands)
 
         def first_occ(s, t):
-            o = port_toward[s, t]
+            o = port_toward[s, t].astype(jnp.int32)
             return jnp.where(o >= 0,
                              jnp.minimum(occ[s, jnp.maximum(o, 0)], OCC_CAP),
                              0)
 
         def path_occ(s, t):
             """Occupancy sum along the MIN path (D <= 2 fast form)."""
-            o1 = port_toward[s, t]
+            o1 = port_toward[s, t].astype(jnp.int32)
             m = nbr[s, jnp.maximum(o1, 0)]
-            two = dist[s, t] >= 2
+            two = self._dist32(s, t) >= 2
             second = jnp.where(two, first_occ(m, t), 0)
             return first_occ(s, t) + second
 
-        len_min = dist[src_r, dst_r]                              # [n_ep]
-        len_val = dist[src_r[:, None], cands] + dist[cands, dst_r[:, None]]
-        live_min = len_min < self.unreach
-        live_val = len_val < self.unreach
+        len_min = self._dist32(src_r, dst_r)                      # [n_ep]
+        len_val = (self._dist32(src_r[:, None], cands)
+                   + self._dist32(cands, dst_r[:, None]))
         if mode == "ugal_l":
-            score_min = len_min * first_occ(src_r, dst_r)
-            score_val = len_val * first_occ(src_r[:, None], cands)
+            occ_min = first_occ(src_r, dst_r)
+            occ_val = first_occ(src_r[:, None], cands)
         else:  # ugal_g: smallest sum of queues along the whole path
-            score_min = path_occ(src_r, dst_r) + len_min
-            score_val = (path_occ(src_r[:, None], cands)
-                         + path_occ(cands, dst_r[:, None]) + len_val)
-        score_min = jnp.where(live_min, score_min, BIG)
-        score_val = jnp.where(live_val, score_val, BIG)
+            occ_min = path_occ(src_r, dst_r)
+            occ_val = (path_occ(src_r[:, None], cands)
+                       + path_occ(cands, dst_r[:, None]))
 
-        scores = jnp.concatenate([score_min[:, None], score_val], axis=1)
+        best = ugal_select(len_min, len_val, occ_min, occ_val,
+                           ugal_g=(mode == "ugal_g"),
+                           unreach=int(UNREACH), big=int(BIG),
+                           use_pallas=self.use_pallas)
         inters = jnp.concatenate([dst_r[:, None], cands], axis=1)
-        best = jnp.argmin(scores, axis=1)                         # MIN wins ties
         inter = jnp.take_along_axis(inters, best[:, None], 1)[:, 0]
         phase = (best == 0).astype(jnp.int32)                     # MIN: phase 1
         return inter, phase
 
     # -- allocation ----------------------------------------------------------
     def _desires(self, pkt, router, occ):
-        tgt = jnp.where(pkt[..., PHASE] == 1, pkt[..., DST],
-                        pkt[..., INTER])
-        eject = (pkt[..., DST] == router) & (pkt[..., PHASE] == 1)
-        min_port = self.port_toward[router, tgt]
+        dst, inter, phase = pk_dst(pkt), pk_inter(pkt), pk_phase(pkt)
+        tgt = jnp.where(phase == 1, dst, inter)
+        eject = (dst == router) & (phase == 1)
+        min_port = self.port_toward[router, tgt].astype(jnp.int32)
         if self.has_ecmp:
             # dead alternates are skipped automatically: occupancy() is
             # BIG where nbr < 0, so argmin lands on a live port
-            opts = self.ecmp_ports[router, tgt]                   # [..., M]
+            opts = self.ecmp_ports[router, tgt].astype(jnp.int32)  # [..., M]
             r_b = jnp.broadcast_to(router[..., None], opts.shape)
             o_occ = jnp.where(opts >= 0,
                               occ[r_b, jnp.maximum(opts, 0)], BIG)
@@ -281,154 +322,154 @@ class SwitchCore:
             out_port = jnp.where(eject, -1, out_port)
         else:
             out_port = min_port
-        out_vc = jnp.minimum(pkt[..., HOPS], self.V - 1)
+        out_vc = jnp.minimum(pk_hops(pkt), self.V - 1)
         return out_port, out_vc, eject
 
-    def alloc(self, nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count,
+    def alloc(self, nq_pkt, nq_count, sq_pkt, sq_count,
               occ, cycle, eject_fold: Callable, eject_acc):
         """One cycle of W-round switch allocation + compaction.
 
-        Returns the six queue arrays plus the folded ejection
-        accumulator.  `eject_fold(acc, grant_ej [R] bool, req_pkt
-        [R, F], cycle)` is called once per round with that round's
-        ejection grants.
+        Returns the four queue arrays plus the folded ejection
+        accumulator (see the class docstring for the fold contract).
         """
-        N, P, V, Qn, Qs, F, W = (self.N, self.P, self.V, self.Qn,
-                                 self.Qs, self.F, self.W)
-        NQ, R, n_ep, p, n_epr = self.NQ, self.R, self.n_ep, self.p, self.n_epr
+        N, P, V, Qn, Qs, W = (self.N, self.P, self.V, self.Qn,
+                              self.Qs, self.W)
+        PV, PE = P * V, self.p
+        n_ep, n_epr = self.n_ep, self.n_epr
         nbr, rev_port = self.nbr, self.rev_port
-        eids, ep_router = self.eids, self.ep_router
-        ep_block_router, req_r_const = self.ep_block_router, self.req_r_const
+        ebr = self.ep_block_router
 
-        queue_granted = jnp.zeros((R,), bool)
-        grant_slot = jnp.full((R,), -1, jnp.int32)
-        chan_taken = jnp.zeros((N * P,), bool)
-        ej_budget = jnp.full((N,), p, jnp.int32)
-        pending_cnt = nq_count  # grows with this cycle's arrivals
+        # ---- the W-slot window is a static slice of the shift-down
+        # FIFOs, taken once for all rounds (identities 1 and 2 in the
+        # module docstring make this exact).  Slots past the buffer end
+        # (W > Qn fig8 configs) are zero-padded; their depth check
+        # (count > w) can never pass, matching the seed's wrap rule.
+        def head_window(pkt_arr, depth_axis_len):
+            wn = min(W, depth_axis_len)
+            win = pkt_arr[..., :wn, :]
+            if wn < W:
+                pad = [(0, 0)] * win.ndim
+                pad[-2] = (0, W - wn)
+                win = jnp.pad(win, pad)
+            return win
+        win_net = head_window(nq_pkt, Qn)                      # [N,P,V,W,PK]
+        win_src = head_window(sq_pkt, Qs)                      # [n_ep,W,PK]
 
+        r_bcast = jnp.broadcast_to(self.routers_n[..., None], (N, P, V, W))
+        ep_bcast = jnp.broadcast_to(self.ep_router[:, None], (n_ep, W))
+        n_out, n_vc, n_ej = self._desires(win_net, r_bcast, occ)
+        s_out, s_vc, s_ej = self._desires(win_src, ep_bcast, occ)
+
+        def space_of(router, out, vc):
+            dr = nbr[router, jnp.maximum(out, 0)]
+            dp = rev_port[router, jnp.maximum(out, 0)]
+            depth = nq_count[jnp.maximum(dr, 0), jnp.maximum(dp, 0), vc]
+            return (out >= 0) & (dr >= 0) & (depth < Qn)
+        n_sp = space_of(r_bcast, n_out, n_vc)
+        s_sp = space_of(ep_bcast, s_out, s_vc)
+
+        # ---- router-major request arrays for the allocation kernel
+        # (W-last layout: the [N,P,V,W] desire arrays reshape in free)
+        def rm_net(x):                             # [N,P,V,W] -> [N,PV,W]
+            return x.reshape(N, PV, W)
+
+        def rm_src(x):                             # [n_ep,W] -> [N,PE,W]
+            y = x.reshape(n_epr, PE, W)
+            return jnp.zeros((N, PE, W), y.dtype).at[ebr].set(y)
+
+        live_q = (nbr >= 0)[:, :, None]
+        cnt_net = jnp.where(live_q, nq_count, 0).reshape(N, PV)
+        cnt_src = jnp.zeros((N, PE), jnp.int32).at[ebr].set(
+            sq_count.reshape(n_epr, PE))
+
+        i32 = jnp.int32
+        chan_n, ej_n, chan_s, ej_s, win_req = alloc_rounds(
+            cycle, rm_net(n_out), rm_net(n_ej.astype(i32)),
+            rm_net(n_sp.astype(i32)), cnt_net,
+            rm_src(s_out), rm_src(s_ej.astype(i32)),
+            rm_src(s_sp.astype(i32)), cnt_src, self.epr_index,
+            W=W, P=P, V=V, PE=PE, p_budget=self.p, NQ=self.NQ, R=self.R,
+            use_pallas=self.use_pallas)
+        cs_net = chan_n.reshape(N, P, V)           # granted window offset
+        ej_net = ej_n.reshape(N, P, V)             # (-1 = none), by kind
+        cs_src = chan_s[ebr].reshape(n_ep)
+        ej_src = ej_s[ebr].reshape(n_ep)
+
+        # ---- engine-specific ejection stats, one fold per round
         for w in range(W):
-            nh_w = jnp.take_along_axis(
-                nq_pkt, ((nq_head + w) % Qn)[:, :, :, None, None],
-                axis=3)[:, :, :, 0]                                # [N,P,V,F]
-            n_valid = (nq_count > w) & (nbr[:, :, None] >= 0)
-            sh_w = sq_pkt[eids, (sq_head + w) % Qs]
-            s_valid = sq_count > w
+            eject_acc = eject_fold(eject_acc, ej_net == w, ej_src == w,
+                                   win_net[:, :, :, w], win_src[:, w],
+                                   cycle)
 
-            n_out, n_vc, n_ej = self._desires(
-                nh_w, jnp.broadcast_to(self.routers_n, (N, P, V)), occ)
-            s_out, s_vc, s_ej = self._desires(sh_w, ep_router, occ)
+        # ---- arrivals, as a dense per-(router, port) view: each input
+        # port receives at most one packet per cycle, always from its
+        # unique upstream channel, so `win_req` of the upstream router
+        # identifies the arriving packet with [N, P]-sized gathers — no
+        # R-row scatter (XLA CPU scatters serialise per row)
+        u_c = jnp.maximum(nbr, 0)                  # upstream router [N,P]
+        uo_c = jnp.maximum(rev_port, 0)            # its out port
+        wi = win_req[u_c, uo_c]                    # winning request id
+        valid = (nbr >= 0) & (wi >= 0)
+        is_net = wi < PV
+        wi_n = jnp.clip(wi, 0, PV - 1)
+        eid = jnp.clip(self.epr_index[u_c] * PE + jnp.maximum(wi - PV, 0),
+                       0, n_ep - 1)
+        slot = jnp.maximum(
+            jnp.where(is_net, chan_n[u_c, wi_n], cs_src[eid]), 0)
+        win_net_pm = win_net.reshape(N, PV, W, PK)
+        pkt = jnp.where(is_net[..., None],
+                        win_net_pm[u_c, wi_n, slot],      # [N,P,PK]
+                        win_src[eid, slot])
+        vc = jnp.where(is_net,
+                       n_vc.reshape(N, PV, W)[u_c, wi_n, slot],
+                       s_vc[eid, slot])
+        here = jnp.arange(N)[:, None]
+        w2 = bump_hops_word(pkt[..., 2],
+                            (here == pk_inter(pkt)).astype(jnp.int32))
+        pkt = jnp.concatenate([pkt[..., :2], w2[..., None]], axis=-1)
+        arrived = valid[..., None] & (jnp.arange(V) == vc[..., None])
 
-            req_out = jnp.concatenate([n_out.reshape(-1), s_out])
-            req_vc = jnp.concatenate([n_vc.reshape(-1), s_vc])
-            req_ej = jnp.concatenate([n_ej.reshape(-1), s_ej])
-            req_valid = (jnp.concatenate([n_valid.reshape(-1), s_valid])
-                         & ~queue_granted)
-            req_pkt = jnp.concatenate([nh_w.reshape(-1, F), sh_w], axis=0)
-
-            # --- ejection grants against remaining per-router budget
-            ej = req_valid & req_ej
-            ej_net = ej[:NQ].reshape(N, P * V)
-            ej_src = ej[NQ:].reshape(n_epr, p)
-            shift = cycle % (P * V)
-            rolled = jnp.roll(ej_net, -shift, axis=1)
-            rank_net = jnp.roll(jnp.cumsum(rolled, axis=1) - 1, shift, axis=1)
-            net_total = ej_net.sum(axis=1).astype(jnp.int32)
-            rank_src = jnp.cumsum(ej_src, axis=1) - 1
-            net_first = (cycle % 2) == 0
-            src_total = jnp.zeros((N,), jnp.int32).at[ep_block_router].add(
-                ej_src.sum(axis=1).astype(jnp.int32))
-            rank_net_f = rank_net + jnp.where(net_first, 0,
-                                              src_total[:, None])
-            rank_src_f = rank_src + jnp.where(
-                net_first, net_total[ep_block_router], 0)[:, None]
-            g_net = ej_net & (rank_net_f < ej_budget[:, None])
-            g_src = ej_src & (rank_src_f < ej_budget[ep_block_router][:, None])
-            grant_ej = jnp.concatenate([g_net.reshape(-1), g_src.reshape(-1)])
-            ej_budget = ej_budget - g_net.sum(axis=1).astype(jnp.int32)
-            ej_budget = ej_budget.at[ep_block_router].add(
-                -g_src.sum(axis=1).astype(jnp.int32))
-
-            # --- network channel grants
-            down_r = nbr[req_r_const, jnp.maximum(req_out, 0)]
-            down_port = rev_port[req_r_const, jnp.maximum(req_out, 0)]
-            space = pending_cnt[jnp.maximum(down_r, 0),
-                                jnp.maximum(down_port, 0), req_vc] < Qn
-            keys_seg = req_r_const * P + jnp.maximum(req_out, 0)
-            eligible = (req_valid & ~req_ej & (req_out >= 0) & (down_r >= 0)
-                        & space & ~chan_taken[keys_seg])
-            qidx = jnp.arange(R)
-            rot = (qidx + cycle * 7919 + w * 131) % R
-            score = jnp.where(eligible, rot * R + qidx,
-                              jnp.iinfo(jnp.int32).max)
-            seg_min = jax.ops.segment_min(score, keys_seg, num_segments=N * P)
-            winner = eligible & (score == seg_min[keys_seg])
-
-            chan_taken = chan_taken.at[keys_seg].max(winner)
-            granted_now = winner | grant_ej
-            queue_granted = queue_granted | granted_now
-            grant_slot = jnp.where(granted_now & (grant_slot < 0), w,
-                                   grant_slot)
-
-            # --- apply arrivals immediately (unique (router, port) / cycle)
-            arr_pkt = req_pkt.at[:, HOPS].add(1)
-            arr_pkt = arr_pkt.at[:, PHASE].set(
-                jnp.where(down_r == arr_pkt[:, INTER], 1, arr_pkt[:, PHASE]))
-            a_r = jnp.where(winner, down_r, N)          # OOB => dropped write
-            a_p = jnp.maximum(down_port, 0)
-            a_tail = (nq_head[jnp.minimum(a_r, N - 1), a_p, req_vc]
-                      + pending_cnt[jnp.minimum(a_r, N - 1), a_p,
-                                    req_vc]) % Qn
-            nq_pkt = nq_pkt.at[a_r, a_p, req_vc, a_tail].set(
-                arr_pkt, mode="drop")
-            pending_cnt = pending_cnt.at[a_r, a_p, req_vc].add(
-                winner.astype(jnp.int32), mode="drop")
-
-            # --- engine-specific ejection stats
-            eject_acc = eject_fold(eject_acc, grant_ej, req_pkt, cycle)
-
-        # ---- dequeues: remove packet at offset grant_slot (shift-up) -----
-        g_net = grant_slot[:NQ].reshape(N, P, V)
-        g_src = grant_slot[NQ:]
-        for j in range(W - 1, 0, -1):
-            # slot head+j <- slot head+j-1 where grant_slot >= j
-            m_net = (g_net >= j)
-            src_slot = jnp.take_along_axis(
-                nq_pkt, ((nq_head + j - 1) % Qn)[:, :, :, None, None],
-                axis=3)[:, :, :, 0]
-            dst_idx = ((nq_head + j) % Qn)
-            cur = jnp.take_along_axis(
-                nq_pkt, dst_idx[:, :, :, None, None], axis=3)[:, :, :, 0]
-            newv = jnp.where(m_net[..., None], src_slot, cur)
-            nq_pkt = jax.vmap(
-                lambda q, i, v: q.at[i].set(v),
-                in_axes=(0, 0, 0))(
-                    nq_pkt.reshape(NQ, Qn, F), dst_idx.reshape(NQ),
-                    newv.reshape(NQ, F)).reshape(N, P, V, Qn, F)
-            m_src = (g_src >= j)
-            s_from = sq_pkt[eids, (sq_head + j - 1) % Qs]
-            s_didx = (sq_head + j) % Qs
-            s_cur = sq_pkt[eids, s_didx]
-            sq_pkt = sq_pkt.at[eids, s_didx].set(
-                jnp.where(m_src[:, None], s_from, s_cur))
-
+        # ---- dequeue + compaction: removing the granted packet at
+        # offset g is a static-shift select (slots >= g take their
+        # successor) — order-preserving, no gathers or scatters; then
+        # the arrival is inserted at the post-dequeue tail by a masked
+        # select (one arrival per (router, port) per cycle)
+        g_net = jnp.maximum(cs_net, ej_net)
+        g_src = jnp.maximum(cs_src, ej_src)
         deq_net = (g_net >= 0).astype(jnp.int32)
         deq_src = (g_src >= 0).astype(jnp.int32)
-        nq_head = (nq_head + deq_net) % Qn
-        nq_count = pending_cnt - deq_net
-        sq_head = (sq_head + deq_src) % Qs
+
+        sidx = jnp.arange(Qn, dtype=jnp.int32)
+        up_net = jnp.concatenate(
+            [nq_pkt[:, :, :, 1:], jnp.zeros_like(nq_pkt[:, :, :, :1])],
+            axis=3)
+        drop_m = (g_net[..., None] >= 0) & (sidx >= g_net[..., None])
+        nq_pkt = jnp.where(drop_m[..., None], up_net, nq_pkt)
+        tail = (nq_count - deq_net)[..., None]             # [N,P,V,1]
+        ins = arrived[..., None] & (sidx == tail)          # [N,P,V,Qn]
+        nq_pkt = jnp.where(ins[..., None], pkt[:, :, None, None, :],
+                           nq_pkt)
+
+        s_sidx = jnp.arange(Qs, dtype=jnp.int32)
+        up_src = jnp.concatenate(
+            [sq_pkt[:, 1:], jnp.zeros_like(sq_pkt[:, :1])], axis=1)
+        s_drop = (g_src[:, None] >= 0) & (s_sidx >= g_src[:, None])
+        sq_pkt = jnp.where(s_drop[..., None], up_src, sq_pkt)
+
+        nq_count = nq_count + arrived.astype(jnp.int32) - deq_net
         sq_count = sq_count - deq_src
 
-        return (nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count,
-                eject_acc)
+        return (nq_pkt, nq_count, sq_pkt, sq_count, eject_acc)
 
 
-def _open_loop_fold(acc, grant_ej, req_pkt, cycle):
+def _open_loop_fold(acc, g_net, g_src, pkt_net, pkt_src, cycle):
     """Open-loop ejection stats: delivered count + latency sum."""
     delivered, lat_sum = acc
-    delivered = delivered + grant_ej.sum().astype(jnp.int32)
-    lat_sum = lat_sum + jnp.where(
-        grant_ej, cycle - req_pkt[:, TIME] + 1, 0).sum().astype(jnp.float32)
-    return delivered, lat_sum
+    delivered = (delivered + g_net.sum().astype(jnp.int32)
+                 + g_src.sum().astype(jnp.int32))
+    lat = (jnp.where(g_net, cycle - pk_time(pkt_net) + 1, 0).sum()
+           + jnp.where(g_src, cycle - pk_time(pkt_src) + 1, 0).sum())
+    return delivered, lat_sum + lat.astype(jnp.float32)
 
 
 # (tables, traffic, static-config) -> compiled (rate, key) -> per-cycle
@@ -451,15 +492,14 @@ def _open_loop_runner(tables: SimTables, traffic: Traffic, cfg: SimConfig):
     if hit is not None and hit[0] is tables and hit[1] is traffic:
         return hit[2]
 
-    core = SwitchCore(tables, cfg, n_fields=5)
+    core = SwitchCore(tables, cfg)
     active = jnp.asarray(traffic.active)
     n_ep, Qs = core.n_ep, core.Qs
     sample = traffic.sample
 
     def run(rate, key0):
         def step(carry, cycle):
-            (nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count,
-             key) = carry
+            nq_pkt, nq_count, sq_pkt, sq_count, key = carry
             key, k_inj, k_dst, k_rt = jax.random.split(key, 4)
 
             occ = core.occupancy(nq_count)
@@ -471,17 +511,15 @@ def _open_loop_runner(tables: SimTables, traffic: Traffic, cfg: SimConfig):
             dst_ep = sample(k_dst)
             dst_r = core.ep_router[dst_ep]
             inter, phase = core.route_decision(dst_r, occ, k_rt)
-            new_pkt = jnp.stack(
-                [dst_r, inter, jnp.full((n_ep,), cycle, jnp.int32),
-                 jnp.zeros((n_ep,), jnp.int32), phase], axis=-1)
-            sq_pkt, sq_count = core.inject(sq_pkt, sq_head, sq_count,
-                                           want, new_pkt)
+            new_pkt = pack_record(dst_r, inter, cycle,
+                                  jnp.zeros((n_ep,), jnp.int32), phase)
+            sq_pkt, sq_count = core.inject(sq_pkt, sq_count, want, new_pkt)
             injected = want.sum()
 
             # ---- shared switch pipeline -----------------------------------
-            (nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count,
+            (nq_pkt, nq_count, sq_pkt, sq_count,
              (delivered, lat_sum)) = core.alloc(
-                 nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count,
+                 nq_pkt, nq_count, sq_pkt, sq_count,
                  occ, cycle, _open_loop_fold,
                  (jnp.int32(0), jnp.float32(0.0)))
 
@@ -489,8 +527,7 @@ def _open_loop_runner(tables: SimTables, traffic: Traffic, cfg: SimConfig):
             stats = (injected.astype(jnp.int32), delivered,
                      lat_sum, sq_count.sum().astype(jnp.int32),
                      dropped.astype(jnp.int32), in_flight)
-            return (nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count,
-                    key), stats
+            return (nq_pkt, nq_count, sq_pkt, sq_count, key), stats
 
         carry = core.init_queues() + (key0,)
         cycles = jnp.arange(cfg.cycles, dtype=jnp.int32)

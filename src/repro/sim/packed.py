@@ -1,0 +1,111 @@
+"""Bit-packed flit records (DESIGN.md §9).
+
+Packet state dominates the simulator's memory traffic: at paper scale
+(SF q=17, N=578 routers, k'=25, 4 VCs) the network queue array holds
+N * P * V * Qn ~ 925k flit slots, and every cycle gathers a W-slot
+window of it and scatters arrivals/compactions back.  The seed engine
+stored each record as 5 (open loop) or 6 (closed loop) int32 fields;
+here every record is exactly ``PK = 3`` int32 words regardless of
+engine:
+
+  word 0   dst_router | inter_router << 16   (15 bits each)
+  word 1   inject_cycle                      (full int32)
+  word 2   hops | phase << 6 | msg << 7      (6 / 1 / 24 bits)
+
+Field budget (asserted, not assumed):
+
+  - router ids need N < 2**15; the largest Slim Fly we target
+    (q = 25) has N = 1250 routers, and every comparison topology in
+    the repo stays far below 32768;
+  - hops saturate at ``HOPS_MAX`` = 63.  The engine only ever consumes
+    ``min(hops, V-1)`` (hop-indexed VC assignment), so saturation is
+    observationally equivalent to the seed's unbounded counter;
+  - msg ids (closed-loop DAG messages) need M < 2**24 (~16.7M — the
+    largest workload in the repo is a few thousand messages);
+  - inject_cycle keeps a full int32 word: closed-loop runs go to
+    max_cycles = 200k and latency sums must not wrap (the int16-ish
+    packing an earlier draft used would wrap at cycle 32768).
+
+Hot paths (ejection folds, route desires) read fields through the
+``pk_*`` accessors directly — no unpack boundary sits on the engine's
+per-cycle path.  `unpack_record`, which restores the seed's flat int32
+record ``(dst, inter, time, hops, phase[, msg])``, exists for tests
+and debugging.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "PK", "HOPS_MAX", "MAX_ROUTERS", "MAX_MSGS",
+    "pack_record", "unpack_record", "bump_hops_word",
+    "pk_dst", "pk_inter", "pk_time", "pk_hops", "pk_phase", "pk_msg",
+]
+
+PK = 3                      # int32 words per packed record
+HOPS_MAX = 63               # saturating hop counter (6 bits)
+MAX_ROUTERS = 1 << 15       # router ids must fit 15 bits
+MAX_MSGS = 1 << 24          # closed-loop msg ids must fit 24 bits
+
+_HOPS_MASK = jnp.int32(HOPS_MAX)
+_ID_MASK = jnp.int32(0xFFFF)
+
+
+def pack_record(dst, inter, time, hops, phase, msg=None):
+    """Stack fields into a packed [..., PK] int32 record."""
+    dst = jnp.asarray(dst, jnp.int32)
+    inter = jnp.asarray(inter, jnp.int32)
+    w0 = dst | (jnp.asarray(inter, jnp.int32) << 16)
+    w2 = (jnp.asarray(hops, jnp.int32)
+          | (jnp.asarray(phase, jnp.int32) << 6))
+    if msg is not None:
+        w2 = w2 | (jnp.asarray(msg, jnp.int32) << 7)
+    w1 = jnp.broadcast_to(jnp.asarray(time, jnp.int32), dst.shape)
+    w2 = jnp.broadcast_to(w2, dst.shape)
+    return jnp.stack([w0, w1, w2], axis=-1)
+
+
+def pk_dst(pkt):
+    return pkt[..., 0] & _ID_MASK
+
+
+def pk_inter(pkt):
+    # word 0 is non-negative (ids < 2**15), so the arithmetic shift is
+    # an exact field extract
+    return pkt[..., 0] >> 16
+
+
+def pk_time(pkt):
+    return pkt[..., 1]
+
+
+def pk_hops(pkt):
+    return pkt[..., 2] & _HOPS_MASK
+
+
+def pk_phase(pkt):
+    return (pkt[..., 2] >> 6) & 1
+
+
+def pk_msg(pkt):
+    return pkt[..., 2] >> 7
+
+
+def bump_hops_word(w2, set_phase):
+    """word-2 update on link traversal: hops+1 (saturating at HOPS_MAX),
+    phase |= set_phase; msg bits carried through untouched."""
+    hops = jnp.minimum((w2 & _HOPS_MASK) + 1, _HOPS_MASK)
+    phase = ((w2 >> 6) & 1) | jnp.asarray(set_phase, jnp.int32)
+    rest = (w2 >> 7) << 7
+    return rest | hops | (phase << 6)
+
+
+def unpack_record(pkt, n_fields: int):
+    """Packed [..., PK] -> flat int32 [..., n_fields] seed-layout record
+    (dst, inter, time, hops, phase[, msg])."""
+    fields = [pk_dst(pkt), pk_inter(pkt), pk_time(pkt), pk_hops(pkt),
+              pk_phase(pkt)]
+    if n_fields == 6:
+        fields.append(pk_msg(pkt))
+    return jnp.stack(fields, axis=-1)

@@ -38,10 +38,10 @@ class SimTables:
     p: int                        # endpoints per endpoint-router
     nbr: np.ndarray               # [N, P] neighbor router (-1 pad/dead)
     rev_port: np.ndarray          # [N, P] port index at nbr pointing back
-    port_toward: np.ndarray       # [N, N] first-hop port of MIN route (-1 self)
+    port_toward: np.ndarray       # [N, N] int16 first-hop MIN port (-1 self)
     dist: np.ndarray              # [N, N] int16 (UNREACH when cut off)
     ep_router: np.ndarray         # [N_ep] router id of each endpoint
-    ecmp_ports: Optional[np.ndarray] = None   # [N, N, M] equal-cost ports
+    ecmp_ports: Optional[np.ndarray] = None   # [N, N, M] int16 equal-cost
     failed_edges: Optional[np.ndarray] = None  # [K, 2] mask these tables saw
 
     @property
@@ -94,7 +94,9 @@ class SimTables:
                 if v >= 0:
                     rev_port[r, o] = port_of[v, r]
 
-        port_toward = np.full((n, n), -1, dtype=np.int32)
+        # the O(N^2) tables are int16 on host and device (DESIGN.md §9);
+        # port indices < k' and distances <= UNREACH both fit easily
+        port_toward = np.full((n, n), -1, dtype=np.int16)
         nh = rt.next_hop
         rr = np.repeat(np.arange(n), n)
         tt = np.tile(np.arange(n), n)
@@ -109,7 +111,7 @@ class SimTables:
             for r in range(n):
                 for t in range(n):
                     width = max(width, len(sets[r][t]))
-            ecmp_ports = np.full((n, n, width), -1, dtype=np.int32)
+            ecmp_ports = np.full((n, n, width), -1, dtype=np.int16)
             for r in range(n):
                 for t in range(n):
                     opts = sets[r][t]

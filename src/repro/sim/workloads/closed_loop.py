@@ -9,9 +9,9 @@ The engine shares :class:`repro.sim.engine.SwitchCore` (credit view,
 route choice, W-round allocation, compaction) with the open-loop
 simulator; only injection and the ejection fold differ:
 
-  - packet records are 6-wide — the extra MSG field names the message a
-    flit belongs to, so the ejection fold can scatter-add per-message
-    delivered-flit counts;
+  - packet records carry an extra MSG field (bit-packed, see
+    repro.sim.packed) naming the message a flit belongs to, so the
+    ejection fold can scatter-add per-message delivered-flit counts;
   - each cycle the ready set is re-derived as a dense mask over DAG
     messages from the carried delivered-flit counters (`done[dep]`
     gather over the padded dep matrix), every endpoint injects one flit
@@ -32,7 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..engine import BIG, MSG, SimConfig, SwitchCore, _cache_put
+from ..engine import BIG, SimConfig, SwitchCore, _cache_put
+from ..packed import MAX_MSGS, pack_record, pk_msg
 from ..tables import SimTables
 from .ir import Workload
 from .mapping import place_ranks
@@ -52,17 +53,19 @@ class WorkloadSimConfig:
     placement: str = "linear"         # see workloads.mapping.PLACEMENTS
     chunk: int = 256                  # cycles per compiled scan chunk
     max_cycles: int = 200_000         # give up (makespan = inf) past this
+    kernel_path: str = "auto"         # auto | ref | pallas (DESIGN.md §9)
 
     def to_sim_config(self) -> SimConfig:
         return SimConfig(vcs=self.vcs, q_net=self.q_net, q_src=self.q_src,
                          mode=self.mode,
                          n_val_candidates=self.n_val_candidates,
-                         lookahead=self.lookahead, seed=self.seed)
+                         lookahead=self.lookahead, seed=self.seed,
+                         kernel_path=self.kernel_path)
 
     def static_key(self) -> tuple:
         return (self.vcs, self.q_net, self.q_src, self.mode,
                 self.n_val_candidates, self.lookahead, self.placement,
-                self.chunk)
+                self.chunk, self.kernel_path)
 
 
 @dataclasses.dataclass
@@ -115,9 +118,10 @@ def _chunk_runner(tables: SimTables, wl: Workload, ep_of_rank: np.ndarray,
     if hit is not None and hit[0] is tables and hit[1] is wl:
         return hit[2]
 
-    core = SwitchCore(tables, cfg.to_sim_config(), n_fields=6)
+    core = SwitchCore(tables, cfg.to_sim_config())
     n_ep, Qs, eids = core.n_ep, core.Qs, core.eids
     M = wl.n_messages
+    assert M < MAX_MSGS, f"msg ids overflow packed records: {M}"
 
     src_ep = ep_of_rank[wl.src]
     dst_ep = ep_of_rank[wl.dst]
@@ -134,17 +138,20 @@ def _chunk_runner(tables: SimTables, wl: Workload, ep_of_rank: np.ndarray,
         mbe[e, :len(v)] = v
     msgs_by_ep = jnp.asarray(mbe)
 
-    def fold(acc, grant_ej, req_pkt, cycle):
+    def fold(acc, g_net, g_src, pkt_net, pkt_src, cycle):
         # per-message flit accounting; message latency comes from the
         # carried start/done cycles, not a per-flit sum
         flits_del, delivered = acc
-        midx = jnp.where(grant_ej, req_pkt[:, MSG], M)      # M = OOB drop
-        flits_del = flits_del.at[midx].add(1, mode="drop")
-        delivered = delivered + grant_ej.sum().astype(jnp.int32)
+        mn = jnp.where(g_net, pk_msg(pkt_net), M)           # M = OOB drop
+        ms = jnp.where(g_src, pk_msg(pkt_src), M)
+        flits_del = flits_del.at[mn.reshape(-1)].add(1, mode="drop")
+        flits_del = flits_del.at[ms].add(1, mode="drop")
+        delivered = (delivered + g_net.sum().astype(jnp.int32)
+                     + g_src.sum().astype(jnp.int32))
         return flits_del, delivered
 
     def step(carry, cycle):
-        (nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count,
+        (nq_pkt, nq_count, sq_pkt, sq_count,
          sent, flits_del, start_c, done_c, key) = carry
         key, k_rt = jax.random.split(key)
 
@@ -166,26 +173,25 @@ def _chunk_runner(tables: SimTables, wl: Workload, ep_of_rank: np.ndarray,
         want = has & (sq_count < Qs)
         dst_r = dst_r_of_msg[mpick]
         inter, phase = core.route_decision(dst_r, occ, k_rt)
-        new_pkt = jnp.stack(
-            [dst_r, inter, jnp.full((n_ep,), cycle, jnp.int32),
-             jnp.zeros((n_ep,), jnp.int32), phase, mpick], axis=-1)
-        sq_pkt, sq_count = core.inject(sq_pkt, sq_head, sq_count,
-                                       want, new_pkt)
+        new_pkt = pack_record(dst_r, inter, cycle,
+                              jnp.zeros((n_ep,), jnp.int32), phase,
+                              msg=mpick)
+        sq_pkt, sq_count = core.inject(sq_pkt, sq_count, want, new_pkt)
         msel = jnp.where(want, mpick, M)                    # M = OOB drop
         sent = sent.at[msel].add(1, mode="drop")
         start_c = start_c.at[msel].min(cycle, mode="drop")
 
         # ---- shared switch pipeline with the per-message fold
-        (nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count,
+        (nq_pkt, nq_count, sq_pkt, sq_count,
          (flits_del, delivered)) = core.alloc(
-             nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count,
+             nq_pkt, nq_count, sq_pkt, sq_count,
              occ, cycle, fold, (flits_del, jnp.int32(0)))
 
         now_done = flits_del >= size
         done_c = jnp.where(now_done & (done_c == BIG), cycle + 1, done_c)
         stats = (want.sum().astype(jnp.int32), delivered,
                  now_done.sum().astype(jnp.int32))
-        return (nq_pkt, nq_head, nq_count, sq_pkt, sq_head, sq_count,
+        return (nq_pkt, nq_count, sq_pkt, sq_count,
                 sent, flits_del, start_c, done_c, key), stats
 
     def run_chunk(carry, offset):
@@ -228,7 +234,7 @@ def run_workload(tables: SimTables, wl: Workload,
             completed = True
             break
 
-    (_, _, _, _, _, _, sent, flits_del, start_c, done_c, _) = carry
+    (_, _, _, _, sent, flits_del, start_c, done_c, _) = carry
     sent = np.asarray(sent, dtype=np.int64)
     flits_del = np.asarray(flits_del, dtype=np.int64)
     start_c = np.asarray(start_c, dtype=np.int64)

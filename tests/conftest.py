@@ -1,0 +1,11 @@
+"""Shared helpers: paper-scale Slim Fly topologies are expensive to
+build (q=17 => 578 routers), so tests share one instance per q."""
+
+import functools
+
+from repro.core import build_slimfly
+
+
+@functools.lru_cache(maxsize=None)
+def cached_slimfly(q: int, p=None):
+    return build_slimfly(q) if p is None else build_slimfly(q, p=p)

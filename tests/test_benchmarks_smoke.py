@@ -16,9 +16,11 @@ from benchmarks.run import MODULES  # noqa: E402
 
 
 @pytest.mark.parametrize("modname", MODULES)
-def test_benchmark_fast_mode(modname, monkeypatch):
+def test_benchmark_fast_mode(modname, monkeypatch, tmp_path):
     monkeypatch.setenv("REPRO_SMOKE", "1")   # sim-heavy modules shrink
     monkeypatch.delenv("REPRO_FULL", raising=False)
+    # engine_scaling writes its BENCH json; keep the repo tree clean
+    monkeypatch.setenv("REPRO_BENCH_OUT", str(tmp_path / "BENCH_engine.json"))
     mod = __import__(f"benchmarks.{modname}", fromlist=["run"])
     rows = mod.run(fast=True)
     assert isinstance(rows, list) and rows, f"{modname}: no rows"
@@ -38,6 +40,26 @@ def test_benchmark_fast_mode(modname, monkeypatch):
         ratios = [row["fabric_ratio"] for row in rows
                   if "fabric_ratio" in row]
         assert ratios and all(0.2 < r < 5.0 for r in ratios), ratios
+    if modname == "fig8_buffers":
+        # both halves of the figure must be present and sane, at the
+        # smoke sweep sizes (REPRO_SMOKE knob threaded through, like
+        # every other sim benchmark)
+        names = " ".join(row["name"] for row in rows)
+        assert "fig8a/buffers/" in names and "fig8be/oversub/" in names
+        assert sum("fig8a/" in row["name"] for row in rows) == 2
+        for row in rows:
+            assert 0.0 <= row["derived"] <= 1.0, row
+            assert row["latency"] > 0, row
+    if modname == "engine_scaling":
+        names = [row["name"] for row in rows]
+        assert "engine_scaling/q5" in names and "engine_scaling/q7" in names
+        for row in rows:
+            assert row["derived"] > 0 and row["compile_s"] > 0, row
+        import json
+        doc = json.load(open(tmp_path / "BENCH_engine.json"))
+        assert doc["schema"] == 1 and doc["suite"] == "engine_scaling"
+        ent = doc["entries"]["engine/q5/ugal_l"]
+        assert ent["cycles_per_sec"] > 0 and ent["cycles"] > 0
     if modname == "faults_sweep":
         # routed resiliency rows plus a completed degraded-JCT row
         names = " ".join(row["name"] for row in rows)

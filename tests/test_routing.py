@@ -109,6 +109,22 @@ def test_valiant_path_valid(q, seed):
         assert topo.adj[u, v]
 
 
+@pytest.mark.parametrize("q", [7, 11, 17])
+def test_channel_load_matches_analytic_paper_scales(q):
+    """§II-B2 at the simulator target sizes (DESIGN.md §9): empirical
+    mean channel load equals l = (2 N_r - k' - 2) p^2 / k' at q = 7,
+    11 and 17 — the loads the scaled engine is validated against."""
+    from conftest import cached_slimfly
+
+    topo = cached_slimfly(q)
+    rt = build_routing(topo, use_pallas=False)
+    avg, mx = channel_load_uniform(rt)
+    expected = analytic_channel_load(topo.network_radix, topo.n_routers,
+                                     topo.p)
+    assert abs(avg - expected) / expected < 1e-9
+    assert mx <= expected * 1.5
+
+
 def test_routing_on_other_topologies():
     for topo in [build_dragonfly(h=2), build_fattree3(p=4)]:
         rt = build_routing(topo, use_pallas=False)

@@ -122,6 +122,49 @@ def test_slimfly_two_hop_property(q, seed):
     assert ok
 
 
+# --------------------------------------------- paper-scale properties --
+# (the sizes the scaled simulator targets — DESIGN.md §9)
+PAPER_QS = [7, 11, 17]
+
+
+@pytest.mark.parametrize("q", PAPER_QS)
+def test_paper_scale_structure_matches_params(q):
+    """Radix / router / endpoint counts of the built network equal
+    `slimfly_params`, and the MMS diameter-2 claim holds at every
+    simulator target size — verified through the Pallas min-plus APSP
+    (the same kernel the analysis pipeline uses)."""
+    from conftest import cached_slimfly
+    from repro.kernels import INF, apsp
+
+    t = cached_slimfly(q)
+    par = slimfly_params(q)
+    assert t.n_routers == par["n_routers"]
+    assert t.network_radix == par["kprime"]
+    assert (t.degrees == par["kprime"]).all()
+    assert t.p == par["p"]
+    assert t.n_endpoints == par["n_endpoints"]
+    assert t.router_radix == par["router_radix"]
+
+    d = np.array(apsp(t.adj, max_diameter=4, use_pallas=True))
+    assert (d < INF / 10).all()              # connected
+    np.fill_diagonal(d, 0)
+    assert int(d.max()) == 2                 # the headline claim
+
+
+@settings(max_examples=12, deadline=None)
+@given(q=st.sampled_from(PAPER_QS), seed=st.integers(0, 10_000))
+def test_paper_scale_two_hop_property(q, seed):
+    """Sampled-pair 2-hop reachability at the simulator target sizes
+    (hypothesis when installed, deterministic fallback otherwise)."""
+    from conftest import cached_slimfly
+
+    t = cached_slimfly(q)
+    rng = np.random.default_rng(seed)
+    a, b = rng.integers(0, t.n_routers, 2)
+    adj = t.adj
+    assert (a == b) or adj[a, b] or bool((adj[a] & adj[b]).any())
+
+
 # ------------------------------------------------- comparison topologies --
 def test_dragonfly_paper_configs():
     """§V: DF k=27, p=7 => N_r=1386, N=9702; Table IV: k=43 => 5346/58806."""
