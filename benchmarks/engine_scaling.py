@@ -3,18 +3,33 @@
 Sweeps the open-loop flit simulator over paper-relevant Slim Fly sizes
 (q = 5 .. 17 fast, + q = 25 under REPRO_FULL) and records steady-state
 cycles/sec, compile time, and peak memory per size into
-``BENCH_engine.json`` (schema: repro.bench.harness).  This file is the
+``BENCH_engine.json`` (schema: repro.bench.harness), plus the
+lane-batched sweep benchmark: the fig6-style 5-point q=5 load sweep run
+three ways —
+
+  - ``per-point jit``: a fresh trace+compile per sweep point (what a
+    naive per-point jit pays, and what a sequential loop over distinct
+    failure masks pays on the single-lane path by design);
+  - ``sequential``: one cached compile, L sequential device launches;
+  - ``sweep_simulate``: one compile, ONE lane-batched launch
+    (DESIGN.md §10), asserted bit-exact against the sequential loop.
+
+The sweep entry's ``sweep_points_per_sec`` (lanes / batched wall
+seconds) joins q=5 cycles/sec as a CI-gated metric.  This file is the
 hot-path trajectory across PRs: CI uploads it as an artifact and gates
-on the q=5 number (``--check-regression``).
+on both q=5 numbers (``--check-regression``).
 
 Knobs follow the other benchmarks: REPRO_SMOKE=1 shrinks to q in
 {5, 7} with short runs (CI / test_benchmarks_smoke); REPRO_FULL=1 (or
---full) extends to q=25.  REPRO_BENCH_OUT overrides the output path;
-without it, only a DIRECT `python -m benchmarks.engine_scaling`
-invocation writes the committed BENCH_engine.json baseline — runs via
-`benchmarks.run` or smoke mode write gitignored
-BENCH_engine.{local,smoke}.json so the CI gate's reference can't be
-clobbered by accident.
+--full) extends to q=25; REPRO_CACHE_DIR enables the persistent
+compilation cache (cold/warm state is recorded in the json meta).
+``--repeats N`` overrides every entry's repeat count (the committed
+q=17 entry defaults to 1 — one steady-state run is ~2.5 min).
+REPRO_BENCH_OUT overrides the output path; without it, only a DIRECT
+`python -m benchmarks.engine_scaling` invocation writes the committed
+BENCH_engine.json baseline — runs via `benchmarks.run` or smoke mode
+write gitignored BENCH_engine.{local,smoke}.json so the CI gate's
+reference can't be clobbered by accident.
 
 CLI:
   python -m benchmarks.engine_scaling              # refresh the baseline
@@ -24,22 +39,30 @@ CLI:
 import argparse
 import os
 import sys
+import time
 
-from repro.bench import (bench_callable, check_regression, load_bench,
-                         write_bench)
+import numpy as np
+
+from repro.bench import (BenchEntry, bench_callable, check_regression,
+                         enable_compilation_cache, load_bench, write_bench)
 from repro.core import build_slimfly, slimfly_params
-from repro.sim import SimConfig, SimTables, make_traffic, simulate
+from repro.sim import (SimConfig, SimTables, make_traffic, simulate,
+                       sweep_simulate)
 
 GATE_ENTRY = "engine/q5/ugal_l"
 GATE_METRIC = "cycles_per_sec"
+SWEEP_GATE_ENTRY = "sweep/q5/fig6-5pt"
+SWEEP_GATE_METRIC = "sweep_points_per_sec"
 # cross-machine gate: the baseline json is written on one machine and
 # checked on another (CI runner), so the factor must stay coarse
 GATE_FACTOR = float(os.environ.get("REPRO_BENCH_GATE_FACTOR", "2.0"))
 
+SWEEP_RATES = [0.1, 0.3, 0.5, 0.7, 0.9]
+
 
 def _bench_point(q: int, cycles: int, mode: str = "ugal_l",
                  rate: float = 0.3, repeats: int = 2,
-                 measure_memory: bool = True):
+                 measure_memory=True):
     """One steady-state measurement of the compiled open-loop scan."""
     par = slimfly_params(q)
     tables = SimTables.build(build_slimfly(q))
@@ -64,9 +87,105 @@ def _bench_point(q: int, cycles: int, mode: str = "ugal_l",
     return entry, state["last"]
 
 
+def _bench_sweep(q: int = 5, cycles: int = 700, mode: str = "ugal_l",
+                 per_point_jit: bool = True, repeats: int = 1):
+    """The fig6-style L-point load sweep, lane-batched vs sequential.
+
+    Returns a BenchEntry for the batched run whose extra metrics carry
+    the two sequential baselines and the end-to-end speedups; steady
+    numbers are the min over `repeats` measurements (the --repeats
+    override applies here like every other entry).  The batched
+    per-lane results are asserted bit-exact against the sequential
+    loop before any number is recorded.
+    """
+    import dataclasses
+
+    import jax
+
+    from repro.sim import engine as _engine
+
+    L = len(SWEEP_RATES)
+    tables = SimTables.build(build_slimfly(q))
+    tr = make_traffic(tables, "uniform")
+    cfg = SimConfig(cycles=cycles, warmup=cycles // 3, mode=mode)
+    cfgs = [dataclasses.replace(cfg, injection_rate=r) for r in SWEEP_RATES]
+
+    # --- baseline A: fresh jit per point — what any naive per-point
+    # jit pays, and what a loop over DISTINCT FAILURE MASKS pays on the
+    # single-lane path by design (constant tables recompile per mask;
+    # DESIGN.md §10).  Caches are cleared so each point really
+    # traces + compiles.
+    per_point_s = None
+    if per_point_jit:
+        t0 = time.perf_counter()
+        for c in cfgs:
+            _engine._OPEN_LOOP_CACHE.clear()
+            jax.clear_caches()
+            simulate(tables, tr, c)
+        per_point_s = time.perf_counter() - t0
+        _engine._OPEN_LOOP_CACHE.clear()
+        jax.clear_caches()
+
+    # --- baseline B: today's cached sequential loop (one compile, L
+    # launches), timed end-to-end including its single compile
+    t0 = time.perf_counter()
+    seq = [simulate(tables, tr, c) for c in cfgs]
+    sequential_s = time.perf_counter() - t0
+    seq_walls = []
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        seq = [simulate(tables, tr, c) for c in cfgs]
+        seq_walls.append(time.perf_counter() - t0)
+    sequential_steady_s = min(seq_walls)
+
+    # --- lane-batched: one compile, one launch
+    t0 = time.perf_counter()
+    swept = sweep_simulate(tables, tr, cfg, rates=SWEEP_RATES)
+    sweep_s = time.perf_counter() - t0
+    sweep_walls = []
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        swept = sweep_simulate(tables, tr, cfg, rates=SWEEP_RATES)
+        sweep_walls.append(time.perf_counter() - t0)
+    sweep_steady_s = min(sweep_walls)
+
+    for a, b in zip(swept, seq):
+        assert (a.delivered, a.injected, a.avg_latency) == \
+            (b.delivered, b.injected, b.avg_latency), \
+            "lane-batched sweep diverged from the sequential loop"
+        np.testing.assert_array_equal(a.per_cycle_delivered,
+                                      b.per_cycle_delivered)
+
+    par = slimfly_params(q)
+    extra = {
+        "sweep_points_per_sec": L / sweep_steady_s,
+        "sweep_e2e_s": sweep_s,
+        "sequential_e2e_s": sequential_s,
+        "sequential_steady_s": sequential_steady_s,
+        "speedup_vs_sequential": sequential_s / sweep_s,
+        "speedup_steady": sequential_steady_s / sweep_steady_s,
+    }
+    if per_point_s is not None:
+        extra["per_point_jit_s"] = per_point_s
+        extra["speedup_vs_per_point_jit"] = per_point_s / sweep_s
+    entry = BenchEntry(
+        name=f"sweep/q{q}/fig6-5pt", wall_s=sweep_steady_s,
+        wall_mean_s=sum(sweep_walls) / len(sweep_walls),
+        compile_s=sweep_s - sweep_steady_s,
+        repeats=len(sweep_walls), cycles=cycles * L,
+        meta=dict(q=q, lanes=L, rates=SWEEP_RATES, mode=mode,
+                  cycles_per_lane=cycles,
+                  n_routers=par["n_routers"],
+                  n_endpoints=par["n_endpoints"]),
+        extra_metrics=extra)
+    return entry
+
+
 def run(fast: bool = True):
     full = os.environ.get("REPRO_FULL", "0") == "1" or not fast
     smoke = os.environ.get("REPRO_SMOKE", "0") == "1" and not full
+    cache_state, cache_dir = enable_compilation_cache()
+    repeats_override = os.environ.get("REPRO_BENCH_REPEATS")
     # only a DELIBERATE baseline refresh (direct `python -m
     # benchmarks.engine_scaling`, which routes through main()) writes
     # the committed BENCH_engine.json; indirect runs (benchmarks.run,
@@ -79,17 +198,29 @@ def run(fast: bool = True):
 
     if smoke:
         points = [(5, 250, 2), (7, 250, 1)]
+        sweep_cycles = 120
     elif full:
         points = [(5, 2000, 3), (7, 2000, 2), (11, 2000, 2),
                   (17, 4000, 1), (25, 2000, 1)]
+        sweep_cycles = 700
     else:
-        # acceptance shape: q=17 open loop, >= 2k cycles, in fast mode
+        # acceptance shape: q=17 open loop, >= 2k cycles, in fast mode;
+        # the sweep benchmark replays the fig6 SMOKE sweep shape (250
+        # cycles/point) — the acceptance workload — while full mode
+        # stretches it to 700 cycles/point for a runtime-dominated view
         points = [(5, 2000, 3), (7, 2000, 2), (11, 2000, 2), (17, 2000, 1)]
+        sweep_cycles = 250
 
     entries, rows = [], []
     for q, cycles, repeats in points:
+        if repeats_override:
+            repeats = int(repeats_override)
+        # tracemalloc's hooks would dominate a paper-scale run; beyond
+        # q=11 the cheap RSS high-water probe keeps peak_mem_bytes
+        # populated at no measurable cost
         entry, res = _bench_point(q, cycles, repeats=repeats,
-                                  measure_memory=(q <= 11))
+                                  measure_memory=(True if q <= 11
+                                                  else "rss"))
         entries.append(entry)
         rows.append(dict(
             name=f"engine_scaling/q{q}",
@@ -100,18 +231,44 @@ def run(fast: bool = True):
             accepted=round(res.accepted_load, 4),
             derived=round(entry.cycles_per_sec, 2)))   # cycles/sec
 
+    # lane-batched sweep benchmark (smoke: skip the per-point-jit
+    # baseline — clearing jax caches and recompiling L times is most of
+    # a CI minute and the bit-exactness assert still runs)
+    sweep_entry = _bench_sweep(
+        q=5, cycles=sweep_cycles, per_point_jit=not smoke,
+        repeats=int(repeats_override) if repeats_override else 1)
+    entries.append(sweep_entry)
+    rows.append(dict(
+        name="engine_scaling/sweep_q5_fig6",
+        lanes=sweep_entry.meta["lanes"],
+        sweep_e2e_s=round(sweep_entry.extra_metrics["sweep_e2e_s"], 2),
+        sequential_e2e_s=round(
+            sweep_entry.extra_metrics["sequential_e2e_s"], 2),
+        speedup=round(
+            sweep_entry.extra_metrics.get(
+                "speedup_vs_per_point_jit",
+                sweep_entry.extra_metrics["speedup_vs_sequential"]), 2),
+        derived=round(
+            sweep_entry.extra_metrics["sweep_points_per_sec"], 3)))
+
     write_bench(out_path, "engine_scaling", entries,
                 extra_meta={"modes": ["ugal_l"],
-                            "smoke": smoke, "full": full})
+                            "smoke": smoke, "full": full,
+                            "compile_cache": cache_state,
+                            "cache_dir": cache_dir})
     return rows
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="override the per-entry steady-state repeat "
+                         "count (e.g. bump the q=17 default of 1)")
     ap.add_argument("--check-regression", metavar="BASELINE", default=None,
                     help="compare a fresh q=5 run against BASELINE and "
-                         "exit 1 on a >GATE_FACTOR cycles/sec regression")
+                         "exit 1 on a >GATE_FACTOR regression of "
+                         "cycles/sec or sweep points/sec")
     args = ap.parse_args()
 
     if args.check_regression:
@@ -122,6 +279,7 @@ def main() -> None:
             # a missing entry) — the sweep step regenerates it
             print(f"no baseline file {args.check_regression}; skipping")
             sys.exit(0)
+        enable_compilation_cache()
         entry, _ = _bench_point(5, cycles=300, repeats=3,
                                 measure_memory=False)
         ok, msg = check_regression(baseline, GATE_ENTRY, GATE_METRIC,
@@ -129,10 +287,24 @@ def main() -> None:
                                    factor=GATE_FACTOR,
                                    higher_is_better=True)
         print(msg)
-        sys.exit(0 if ok else 1)
+        # points/sec scales with the per-lane cycle count, so the fresh
+        # measurement must replay the baseline entry's own cycles
+        base_sweep = baseline.get("entries", {}).get(SWEEP_GATE_ENTRY, {})
+        sweep_cycles = int(base_sweep.get("meta", {})
+                           .get("cycles_per_lane", 700))
+        sweep_entry = _bench_sweep(5, cycles=sweep_cycles,
+                                   per_point_jit=False)
+        ok2, msg2 = check_regression(
+            baseline, SWEEP_GATE_ENTRY, SWEEP_GATE_METRIC,
+            sweep_entry.extra_metrics[SWEEP_GATE_METRIC],
+            factor=GATE_FACTOR, higher_is_better=True)
+        print(msg2)
+        sys.exit(0 if ok and ok2 else 1)
 
     if args.full:
         os.environ["REPRO_FULL"] = "1"
+    if args.repeats:
+        os.environ["REPRO_BENCH_REPEATS"] = str(args.repeats)
     # direct non-smoke CLI invocation = deliberate baseline refresh;
     # smoke runs keep run()'s gitignored default even when direct
     if os.environ.get("REPRO_SMOKE", "0") != "1" or args.full:

@@ -23,9 +23,8 @@ from repro.core.resiliency import (failure_edge_sample,
                                    routed_resilience_sweep)
 from repro.core.routing import build_routing, routed_resiliency_metrics
 from repro.core.topologies import build_dragonfly, build_fattree3
-from repro.sim import SimTables
-from repro.sim.workloads import (WorkloadSimConfig, ring_all_reduce,
-                                 run_workload)
+from repro.sim import SimTables, sweep_run_workload
+from repro.sim.workloads import WorkloadSimConfig, ring_all_reduce
 
 
 def _routable_sample(topo, fraction: float, seed: int, tries: int = 20):
@@ -97,11 +96,15 @@ def run(fast: bool = True):
             connected=m.connected))
 
         # -- closed-loop JCT inflation on the degraded fabric -----------
+        # healthy and degraded fabrics are two LANES of one batched
+        # closed-loop run (repro.sim.sweep, DESIGN.md §10): identical
+        # shapes, different table operands — one compile, one chunk
+        # loop, instead of a recompile per failure mask
         wl = ring_all_reduce(ranks, chunk_flits)
         cfg = WorkloadSimConfig(mode=mode, chunk=128)
-        healthy = run_workload(SimTables.build(topo, ecmp=ecmp), wl, cfg)
-        degraded = run_workload(
-            SimTables.build(topo, ecmp=ecmp, failed_edges=fe), wl, cfg)
+        healthy, degraded = sweep_run_workload(
+            [SimTables.build(topo, ecmp=ecmp),
+             SimTables.build(topo, ecmp=ecmp, failed_edges=fe)], wl, cfg)
         ratio = (degraded.makespan / healthy.makespan
                  if np.isfinite(healthy.makespan) and healthy.makespan > 0
                  else float("inf"))

@@ -1,6 +1,12 @@
 """Fig 6: latency/throughput of MIN / VAL / UGAL-L / UGAL-G on SF vs
 DF-UGAL-L and FT-ANCA(ecmp), under uniform, shift and worst-case traffic.
 
+Load sweeps run through the lane-batched sweep engine
+(`repro.sim.sweep`, DESIGN.md §10): all rate points of one
+(topology, pattern, mode) are stacked into a lane axis and executed as
+one compiled scan — one trace, one launch per curve, instead of a
+Python loop over points.
+
 fast mode: q=5 Slim Fly (N=200), short runs — trends, not absolute values.
 full mode (REPRO_FULL=1): q=19 (N=10830, the paper's network).
 """
@@ -9,7 +15,7 @@ import os
 
 from repro.core import build_slimfly
 from repro.core.topologies import build_dragonfly, build_fattree3
-from repro.sim import SimConfig, SimTables, make_traffic, simulate
+from repro.sim import SimConfig, SimTables, make_traffic, sweep_simulate
 
 
 def run(fast: bool = True):
@@ -25,48 +31,47 @@ def run(fast: bool = True):
     ft = SimTables.build(build_fattree3(p=22 if full else 4), ecmp=True)
 
     rows = []
-    # one Traffic per (tables, pattern): simulate()'s compile cache is
-    # keyed on the traffic object, so the load sweep reuses one
-    # compiled scan per (topology, pattern, mode) instead of retracing
-    # at every rate point
+    # one Traffic per (tables, pattern): the sweep/runner caches are
+    # keyed on the traffic object, so every curve of a pattern reuses
+    # one compiled scan
     traffics = {}
 
-    def sim(tables, pattern, mode, rate, tag):
+    def sweep(tables, pattern, mode, rates, tag):
+        """One load curve = one lane-batched launch over `rates`."""
         tr = traffics.get((id(tables), pattern))
         if tr is None:
             tr = traffics[(id(tables), pattern)] = make_traffic(tables,
                                                                 pattern)
-        r = simulate(tables, tr, SimConfig(
-            injection_rate=rate, cycles=cycles, warmup=warmup, mode=mode,
-            lookahead=6 if full else 4))
-        rows.append(dict(name=f"fig6/{tag}/{pattern}/{mode}@{rate}",
-                         accepted=round(r.accepted_load, 4),
-                         latency=round(r.avg_latency, 2),
-                         derived=round(r.accepted_load, 4)))
-        return r
+        res = sweep_simulate(tables, tr, SimConfig(
+            cycles=cycles, warmup=warmup, mode=mode,
+            lookahead=6 if full else 4), rates=list(rates))
+        for rate, r in zip(rates, res):
+            rows.append(dict(name=f"fig6/{tag}/{pattern}/{mode}@{rate}",
+                             accepted=round(r.accepted_load, 4),
+                             latency=round(r.avg_latency, 2),
+                             derived=round(r.accepted_load, 4)))
+        return res
 
     # --- 6a uniform: low-load latency + saturation throughput
     loads = ([0.1, 0.3, 0.5, 0.7, 0.9] if full
              else ([0.5] if smoke else [0.1, 0.5, 0.8]))
-    for rate in loads:
-        for mode in ["min", "val", "ugal_l", "ugal_g"]:
-            sim(sf, "uniform", mode, rate, "sf")
-        sim(df, "uniform", "ugal_l", rate, "df")
-        sim(ft, "uniform", "ecmp", rate, "ft3")
+    for mode in ["min", "val", "ugal_l", "ugal_g"]:
+        sweep(sf, "uniform", mode, loads, "sf")
+    sweep(df, "uniform", "ugal_l", loads, "df")
+    sweep(ft, "uniform", "ecmp", loads, "ft3")
 
     # --- 6b/6c shift + shuffle
     patterns = ["shift"] if smoke else ["shift", "shuffle"]
     for pattern in patterns:
         for mode in (["min"] if smoke else ["min", "ugal_l"]):
-            sim(sf, pattern, mode, 0.3, "sf")
+            sweep(sf, pattern, mode, [0.3], "sf")
         if not smoke:
-            sim(df, pattern, "ugal_l", 0.3, "df")
+            sweep(df, pattern, "ugal_l", [0.3], "df")
 
     # --- 6d worst-case
     wc_rates = [0.2] if smoke else [0.2, 0.5]
-    for rate in wc_rates:
-        for mode in (["ugal_l"] if smoke else ["min", "val", "ugal_l"]):
-            sim(sf, "worstcase_sf", mode, rate, "sf")
-        if not smoke:
-            sim(df, "worstcase_df", "ugal_l", rate, "df")
+    for mode in (["ugal_l"] if smoke else ["min", "val", "ugal_l"]):
+        sweep(sf, "worstcase_sf", mode, wc_rates, "sf")
+    if not smoke:
+        sweep(df, "worstcase_df", "ugal_l", wc_rates, "df")
     return rows

@@ -1,13 +1,19 @@
 """Flit-level simulation of Slim Fly routing (paper §V, Fig 6): sweeps
 offered load for MIN/VAL/UGAL-L and prints the latency/throughput curve.
 
+Each mode's load curve runs as ONE lane-batched launch
+(`sweep_simulate`, DESIGN.md §10): the five rate points share a single
+compile instead of paying a Python round-trip per point.
+
   PYTHONPATH=src python examples/simulate_routing.py [--q 5] [--pattern uniform]
 """
 
 import argparse
 
 from repro.core import build_slimfly
-from repro.sim import SimConfig, SimTables, make_traffic, simulate
+from repro.sim import SimConfig, SimTables, make_traffic, sweep_simulate
+
+LOADS = [0.1, 0.3, 0.5, 0.7, 0.9]
 
 
 def main():
@@ -25,10 +31,10 @@ def main():
           f"{int(traffic.active.sum())} active ({args.pattern})")
     print(f"{'mode':8s} {'offered':>8s} {'accepted':>9s} {'latency':>9s}")
     for mode in ["min", "val", "ugal_l"]:
-        for rate in [0.1, 0.3, 0.5, 0.7, 0.9]:
-            r = simulate(tables, traffic, SimConfig(
-                injection_rate=rate, cycles=args.cycles,
-                warmup=args.cycles // 3, mode=mode))
+        results = sweep_simulate(tables, traffic, SimConfig(
+            cycles=args.cycles, warmup=args.cycles // 3, mode=mode),
+            rates=LOADS)
+        for rate, r in zip(LOADS, results):
             print(f"{mode:8s} {rate:8.2f} {r.accepted_load:9.3f} "
                   f"{r.avg_latency:9.2f}")
 

@@ -15,7 +15,15 @@ Methodology:
   tracemalloc only sees host-side Python allocations (device buffers
   are invisible to it), so that number is a coarse host-traffic proxy
   — which probe produced an entry is recorded in its ``mem_probe``
-  field so trajectories never silently mix the two.
+  field so trajectories never silently mix the two.  Paper-scale
+  entries use the near-free RSS high-water probe (``cheap=True`` /
+  ``measure_memory="rss"``) instead of tracemalloc, whose hooks would
+  dominate a q=17 run; ``peak_mem_bytes`` is therefore never null.
+- `enable_compilation_cache` points JAX's persistent compilation cache
+  at ``$REPRO_CACHE_DIR`` (no-op when unset) and reports whether the
+  directory was cold or warm, so benchmark wall times can distinguish
+  a real XLA compile from a cache deserialize.  CI persists the
+  directory across runs.
 
 Schema (``BENCH_*.json``)::
 
@@ -36,14 +44,49 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import time
 import tracemalloc
 from typing import Callable, Optional
 
 __all__ = ["BenchEntry", "bench_callable", "peak_memory_bytes",
+           "rss_hwm_bytes", "enable_compilation_cache",
            "write_bench", "load_bench", "check_regression"]
 
 SCHEMA_VERSION = 1
+
+
+def enable_compilation_cache() -> tuple:
+    """Point JAX's persistent compilation cache at ``$REPRO_CACHE_DIR``.
+
+    Returns ``(state, cache_dir)`` where state is:
+      - ``"off"``   — env var unset, nothing configured;
+      - ``"cold"``  — cache enabled, directory empty (compiles will
+        populate it);
+      - ``"warm"``  — cache enabled and already populated (compiles
+        with unchanged HLO deserialize instead of re-running XLA).
+
+    Call this BEFORE the first jit of the process (benchmarks.run /
+    engine_scaling do it at main() entry).  The min-compile-time gate
+    is lowered to 1s so the big simulator scans always persist, and
+    entries are written on every backend including CPU.  The sweep
+    engine's tables-as-operands design is what makes the cache useful
+    for fault studies at all: masks live in operands, not in the HLO,
+    so every failure sample of a topology hits one cache entry
+    (DESIGN.md §10).
+    """
+    cache_dir = os.environ.get("REPRO_CACHE_DIR", "")
+    if not cache_dir:
+        return "off", None
+    import jax
+
+    os.makedirs(cache_dir, exist_ok=True)
+    state = "warm" if any(
+        name.endswith("-cache") for name in os.listdir(cache_dir)) else "cold"
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 1.0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    return state, cache_dir
 
 
 @dataclasses.dataclass
@@ -55,10 +98,15 @@ class BenchEntry:
     repeats: int
     cycles: Optional[int] = None        # simulated cycles per call
     peak_mem_bytes: Optional[int] = None
-    # device | tracemalloc | tracemalloc-nested | none ("none" also
-    # covers a device high-water mark hidden by an earlier workload)
+    # device | tracemalloc | tracemalloc-nested | rss | rss-total |
+    # none (rss-total = absolute VmHWM when an earlier, larger workload
+    # hides this call behind the monotone high-water mark)
     mem_probe: str = "none"
     meta: dict = dataclasses.field(default_factory=dict)
+    # additional top-level gate metrics (e.g. sweep_points_per_sec) —
+    # serialized beside cycles_per_sec so check_regression can address
+    # them by name
+    extra_metrics: dict = dataclasses.field(default_factory=dict)
 
     @property
     def cycles_per_sec(self) -> Optional[float]:
@@ -79,16 +127,56 @@ class BenchEntry:
         if self.cycles is not None:
             d["cycles"] = self.cycles
             d["cycles_per_sec"] = self.cycles_per_sec
+        d.update(self.extra_metrics)
         return d
 
 
-def peak_memory_bytes(fn: Callable[[], object]) -> tuple:
+def rss_hwm_bytes() -> Optional[int]:
+    """Process peak resident-set size (VmHWM) in bytes, or None when
+    the platform exposes neither /proc nor getrusage."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    return int(line.split()[1]) * 1024
+    except OSError:
+        pass
+    try:
+        import resource
+        import sys
+        ru = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        # ru_maxrss is bytes on macOS, KiB everywhere else
+        return int(ru) * (1 if sys.platform == "darwin" else 1024)
+    except Exception:
+        return None
+
+
+def peak_memory_bytes(fn: Callable[[], object],
+                      cheap: bool = False) -> tuple:
     """(peak_bytes, probe_kind) for one invocation of `fn`.
 
     Uses the device allocator's peak counter when the backend exposes
-    one (delta vs the pre-call peak), else tracemalloc.
+    one (delta vs the pre-call peak), else tracemalloc.  With
+    ``cheap=True`` (or as the last-resort fallback) the probe reads the
+    process RSS high-water mark instead: near-zero overhead — the
+    tracemalloc hooks dominate paper-scale runs — at the cost of
+    coarser attribution.  A call that does not move the monotone HWM
+    reports the absolute mark with probe ``"rss-total"`` so
+    ``peak_mem_bytes`` is never null.
     """
     import jax
+
+    if cheap:
+        before = rss_hwm_bytes()
+        fn()
+        after = rss_hwm_bytes()
+        if after is None:
+            return None, "none"
+        if before is not None and after > before:
+            return int(after - before), "rss"
+        # an earlier larger workload hides this call behind the HWM:
+        # report the absolute mark, clearly labelled
+        return int(after), "rss-total"
 
     dev = jax.devices()[0]
     stats = getattr(dev, "memory_stats", lambda: None)()
@@ -100,8 +188,10 @@ def peak_memory_bytes(fn: Callable[[], object]) -> tuple:
             return int(after - before), "device"
         # the allocator peak is a monotone high-water mark: an earlier,
         # larger workload in this process hides this call entirely —
-        # record "no reading" rather than a misleading 0
-        return None, "none"
+        # fall back to the absolute RSS mark rather than reporting
+        # nothing (mem_probe records which probe produced the number)
+        rss = rss_hwm_bytes()
+        return (int(rss), "rss-total") if rss is not None else (None, "none")
     if tracemalloc.is_tracing():
         # don't clobber an enclosing session's peak with reset_peak();
         # approximate from the running counters and label the probe so
@@ -122,7 +212,7 @@ def peak_memory_bytes(fn: Callable[[], object]) -> tuple:
 
 def bench_callable(name: str, fn: Callable[[], object], *,
                    repeats: int = 3, cycles: Optional[int] = None,
-                   measure_memory: bool = True,
+                   measure_memory=True,
                    meta: Optional[dict] = None) -> BenchEntry:
     """Compile-vs-steady-state timing of `fn` (which must block until
     the result is materialised — call block_until_ready/np.asarray
@@ -131,13 +221,17 @@ def bench_callable(name: str, fn: Callable[[], object], *,
     The memory probe brackets the FIRST call: on allocator-stats
     backends the peak counter is a monotone high-water mark, so only
     the first execution moves it — probing a later call would read a
-    zero delta.  When the probe is tracemalloc, `compile_s` includes
-    its tracing overhead (both are coarse diagnostics, not gate
-    metrics)."""
+    zero delta.  ``measure_memory`` may be True (full probe: device
+    stats or tracemalloc), ``"rss"`` (cheap RSS high-water probe — the
+    right choice for paper-scale entries where tracemalloc's hooks
+    would dominate the measurement), or False (no probe).  When the
+    probe is tracemalloc, `compile_s` includes its tracing overhead
+    (both are coarse diagnostics, not gate metrics)."""
     t0 = time.perf_counter()
     peak, probe = (None, "none")
     if measure_memory:
-        peak, probe = peak_memory_bytes(fn)  # trace + compile + warmup
+        peak, probe = peak_memory_bytes(
+            fn, cheap=(measure_memory == "rss"))  # trace+compile+warmup
     else:
         fn()
     compile_s = time.perf_counter() - t0

@@ -130,8 +130,28 @@ def alloc_rounds(cycle, out_net, ej_net, space_net, count_net,
                  out_src, ej_src, space_src, count_src, epr_index,
                  *, W: int, P: int, V: int, PE: int, p_budget: int,
                  NQ: int, R: int, use_pallas: bool = False):
-    """Dispatch between the Pallas kernel and the pure-jnp oracle."""
+    """Dispatch between the Pallas kernel and the pure-jnp oracle.
+
+    Lane axis (DESIGN.md §10): request arrays may carry one extra
+    LEADING lane dimension ([L, N, PV, W] etc. — detected by rank).
+    Lanes are mapped with jax.vmap, under which the Pallas grid grows a
+    trailing lane dimension (`pl.program_id(0)` still indexes router
+    blocks, so the in-kernel `row0` priority math is untouched); each
+    lane's grants are bit-identical to a single-lane call
+    (tests/test_sweep.py).  `cycle` may be scalar (shared) or [L];
+    `epr_index` is placement-derived and always lane-invariant.
+    """
     fn = alloc_rounds_pallas if use_pallas else ref.alloc_rounds_ref
+    if out_net.ndim == 4:
+        cycle = jnp.asarray(cycle)
+        lane_fn = functools.partial(
+            fn, W=W, P=P, V=V, PE=PE, p_budget=p_budget, NQ=NQ, R=R)
+        return jax.vmap(
+            lane_fn,
+            in_axes=((0 if cycle.ndim else None,)
+                     + (0,) * 8 + (None,)))(
+            cycle, out_net, ej_net, space_net, count_net,
+            out_src, ej_src, space_src, count_src, epr_index)
     return fn(cycle, out_net, ej_net, space_net, count_net,
               out_src, ej_src, space_src, count_src, epr_index,
               W=W, P=P, V=V, PE=PE, p_budget=p_budget, NQ=NQ, R=R)
@@ -179,7 +199,15 @@ def ugal_select_pallas(len_min, len_val, occ_min, occ_val,
 def ugal_select(len_min, len_val, occ_min, occ_val,
                 *, ugal_g: bool, unreach: int, big: int,
                 use_pallas: bool = False):
-    """Dispatch between the Pallas kernel and the pure-jnp oracle."""
+    """Dispatch between the Pallas kernel and the pure-jnp oracle.
+
+    As with :func:`alloc_rounds`, one extra leading lane axis is
+    accepted ([L, E] / [L, E, C]) and vmapped, bit-identically per
+    lane."""
     fn = ugal_select_pallas if use_pallas else ref.ugal_select_ref
+    if len_min.ndim == 2:
+        lane_fn = functools.partial(fn, ugal_g=ugal_g, unreach=unreach,
+                                    big=big)
+        return jax.vmap(lane_fn)(len_min, len_val, occ_min, occ_val)
     return fn(len_min, len_val, occ_min, occ_val,
               ugal_g=ugal_g, unreach=unreach, big=big)

@@ -6,6 +6,14 @@ shared verbatim with the Pallas kernels in `alloc.py`: the kernel runs
 the same function on a block of rows, so ref and pallas paths agree
 bit-for-bit by construction (asserted end-to-end by
 tests/test_engine_scaling.py).
+
+Lane batching (DESIGN.md §10): the oracles are rank-fixed; an extra
+leading lane axis is handled by the dispatchers in `alloc.py`, which
+jax.vmap whichever implementation is selected.  vmap of a pure-jnp
+oracle is value-preserving per lane by construction, and vmap of the
+Pallas kernels appends a lane dimension to the grid without renumbering
+`program_id`, so the per-lane bit-equality between the two paths is
+unchanged (asserted per lane by tests/test_sweep.py).
 """
 
 from __future__ import annotations

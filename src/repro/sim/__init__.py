@@ -5,13 +5,16 @@
              SF worst-case, DF worst-case)
 - engine:    input-queued router model (SwitchCore), lax.scan over
              cycles; open-loop Bernoulli `simulate`
+- sweep:     lane-batched sweeps — L (rate, seed, failure-mask) points
+             as one compiled vmap-ed scan (DESIGN.md §10)
 - workloads: closed-loop message-DAG engine on the same SwitchCore
              (collectives / stencil / graph JCT runs, DESIGN.md §7)
 """
 
 from .engine import SimConfig, SimResult, SwitchCore, simulate
+from .sweep import sweep_run_workload, sweep_simulate
 from .tables import SimTables
 from .traffic import make_traffic
 
 __all__ = ["SimConfig", "SimResult", "SwitchCore", "simulate", "SimTables",
-           "make_traffic"]
+           "make_traffic", "sweep_simulate", "sweep_run_workload"]

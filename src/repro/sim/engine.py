@@ -53,14 +53,20 @@ State layout: packed records [..., PK=3]; network queues [N, P, V, Qn,
 PK] as shift-down FIFOs (head at slot 0) with a count array; source
 queues [N_ep, Qs, PK].
 
-`simulate` compiles one `(rate, key) ->` scan per (tables, traffic,
-static-config) signature and caches it, so a load sweep (fig6) traces
-and compiles the network exactly once — injection rate and PRNG seed are
-traced operands, not Python constants baked into the graph.
+`simulate` compiles one `(carry, rate) ->` scan per (tables, traffic,
+static-config) signature and caches it: injection rate and PRNG seed
+are traced operands, so a load sweep (fig6) traces and compiles the
+network exactly once.  The routing tables stay CLOSURE CONSTANTS here
+— XLA specialises the per-cycle gathers against constant index tables
+(~2.5x at q=11) — so a new failure mask recompiles this path; sweeps
+over masks belong on the lane-batched engine (`repro.sim.sweep`),
+where the tables become traced operands shared by one compile across
+all lanes (DESIGN.md §10).  The initial scan carry is donated.
 """
 
 from __future__ import annotations
 
+import copy
 import dataclasses
 from typing import Callable
 
@@ -151,6 +157,8 @@ class SwitchCore:
     """
 
     def __init__(self, tables: SimTables, cfg: SimConfig):
+        assert tables.lanes == 1, \
+            "SwitchCore is single-lane; stacked tables go to sim.sweep"
         self.tables = tables
         N, P, V = tables.n_routers, tables.P, cfg.vcs
         assert N < MAX_ROUTERS, f"router ids overflow packed records: {N}"
@@ -170,14 +178,11 @@ class SwitchCore:
         # narrow on-device tables (DESIGN.md §9): the O(N^2) tables are
         # int16 (ids < 2^15 asserted above) and gathered values are
         # widened to int32 at their use sites
-        self.nbr = jnp.asarray(tables.nbr.astype(np.int32))
-        self.rev_port = jnp.asarray(tables.rev_port.astype(np.int32))
-        self.port_toward = jnp.asarray(tables.port_toward.astype(np.int16))
-        self.dist = jnp.asarray(tables.dist.astype(np.int16))
-        self.ep_router = jnp.asarray(tables.ep_router.astype(np.int32))
+        self.ecmp_ports = None
+        for name, arr in self.device_tables(tables).items():
+            setattr(self, name, arr)
         self.has_ecmp = tables.ecmp_ports is not None
-        self.ecmp_ports = (jnp.asarray(tables.ecmp_ports.astype(np.int16))
-                           if self.has_ecmp else None)
+        self.ep_router = jnp.asarray(tables.ep_router.astype(np.int32))
 
         # endpoint-router blocks for ejection ranking: endpoints are
         # sorted by router and each endpoint-router has exactly p
@@ -195,6 +200,43 @@ class SwitchCore:
         self.R = self.NQ + self.n_ep
         self.eids = jnp.arange(self.n_ep)
         self.routers_n = jnp.arange(N)[:, None, None]          # [N,1,1]
+
+    # -- table operands ------------------------------------------------------
+    # Routing tables are TRACED OPERANDS of the compiled step, not
+    # closure constants: with constants, every failure mask bakes a
+    # different HLO (so each degraded fabric recompiles and the
+    # persistent compilation cache can never hit), and the sweep
+    # engine could not vmap over per-lane masks at all (DESIGN.md §10).
+    @staticmethod
+    def device_tables(tables: SimTables) -> dict:
+        """The mask-dependent table arrays, as device operands."""
+        ops = {
+            "nbr": jnp.asarray(tables.nbr.astype(np.int32)),
+            "rev_port": jnp.asarray(tables.rev_port.astype(np.int32)),
+            "port_toward": jnp.asarray(tables.port_toward.astype(np.int16)),
+            "dist": jnp.asarray(tables.dist.astype(np.int16)),
+        }
+        if tables.ecmp_ports is not None:
+            ops["ecmp_ports"] = jnp.asarray(
+                tables.ecmp_ports.astype(np.int16))
+        return ops
+
+    def table_operands(self) -> dict:
+        """This core's current table arrays (pass back via bind_tables)."""
+        ops = {"nbr": self.nbr, "rev_port": self.rev_port,
+               "port_toward": self.port_toward, "dist": self.dist}
+        if self.has_ecmp:
+            ops["ecmp_ports"] = self.ecmp_ports
+        return ops
+
+    def bind_tables(self, ops: dict) -> "SwitchCore":
+        """Shallow copy with the table arrays swapped for `ops` (tracers
+        inside a jit/vmap, or another mask's concrete arrays)."""
+        assert ("ecmp_ports" in ops) == self.has_ecmp
+        c = copy.copy(self)
+        for name, arr in ops.items():
+            setattr(c, name, arr)
+        return c
 
     # -- queue state ---------------------------------------------------------
     # Queues are shift-down FIFOs: the head packet always sits at slot 0
@@ -373,14 +415,21 @@ class SwitchCore:
         def rm_net(x):                             # [N,P,V,W] -> [N,PV,W]
             return x.reshape(N, PV, W)
 
+        # routers -> their endpoint block, as a GATHER through the
+        # inverse map epr_index (non-endpoint routers gather row 0,
+        # masked to zero): bit-identical to the scatter .at[ebr].set
+        # it replaces, but XLA CPU serialises scatters per row — and
+        # under the sweep engine's lane vmap (sweep.py) a batched
+        # scatter is the single hottest lowering in the whole step
         def rm_src(x):                             # [n_ep,W] -> [N,PE,W]
             y = x.reshape(n_epr, PE, W)
-            return jnp.zeros((N, PE, W), y.dtype).at[ebr].set(y)
+            g = y[jnp.maximum(self.epr_index, 0)]
+            return jnp.where((self.epr_index >= 0)[:, None, None], g, 0)
 
         live_q = (nbr >= 0)[:, :, None]
         cnt_net = jnp.where(live_q, nq_count, 0).reshape(N, PV)
-        cnt_src = jnp.zeros((N, PE), jnp.int32).at[ebr].set(
-            sq_count.reshape(n_epr, PE))
+        cs_rows = sq_count.reshape(n_epr, PE)[jnp.maximum(self.epr_index, 0)]
+        cnt_src = jnp.where((self.epr_index >= 0)[:, None], cs_rows, 0)
 
         i32 = jnp.int32
         chan_n, ej_n, chan_s, ej_s, win_req = alloc_rounds(
@@ -472,10 +521,17 @@ def _open_loop_fold(acc, g_net, g_src, pkt_net, pkt_src, cycle):
     return delivered, lat_sum + lat.astype(jnp.float32)
 
 
-# (tables, traffic, static-config) -> compiled (rate, key) -> per-cycle
-# stats.  Values pin the tables/traffic objects so the id() keys cannot
-# be silently reused by the allocator; the FIFO bound keeps a long-lived
-# process from accumulating compiled executables without limit.
+# (tables, traffic, static-config) -> compiled (carry, rate) -> per-cycle
+# stats.  The single-lane runner keeps the routing tables as CLOSURE
+# CONSTANTS: XLA specialises the per-cycle gathers against constant
+# index tables (measured ~2.5x at q=11 vs operand tables), so the
+# single-lane hot path deliberately recompiles per failure mask — a
+# sweep over masks belongs on the lane-batched path (repro.sim.sweep),
+# which lifts the tables into traced operands and pays one compile for
+# all masks (DESIGN.md §10).  Values pin the tables/traffic objects so
+# the id() keys cannot be silently reused by the allocator; the FIFO
+# bound keeps a long-lived process from accumulating compiled
+# executables without limit.
 _OPEN_LOOP_CACHE: dict = {}
 _CACHE_MAX = 32
 
@@ -486,65 +542,90 @@ def _cache_put(cache: dict, key, value) -> None:
     cache[key] = value
 
 
+def tables_signature(tables: SimTables) -> tuple:
+    """Compile-relevant structure of a table set: everything that shapes
+    the traced step EXCEPT the mask-dependent array values."""
+    return (tables.n_routers, tables.P, tables.p, tables.n_endpoints,
+            None if tables.ecmp_ports is None
+            else tables.ecmp_ports.shape[-1],
+            tables.ep_router.tobytes())
+
+
+def _open_loop_step(core: SwitchCore, traffic: Traffic, rate):
+    """One-cycle step closure of the open-loop engine for `core`.
+
+    Rank-polymorphic by construction: the sweep engine maps this exact
+    function over a lane axis with jax.vmap, so per-lane results are
+    bit-identical to L sequential runs (tests/test_sweep.py)."""
+    active = jnp.asarray(traffic.active)
+    n_ep, Qs = core.n_ep, core.Qs
+    sample = traffic.sample
+
+    def step(carry, cycle):
+        nq_pkt, nq_count, sq_pkt, sq_count, key = carry
+        key, k_inj, k_dst, k_rt = jax.random.split(key, 4)
+
+        occ = core.occupancy(nq_count)
+
+        # ---- injection ----------------------------------------------------
+        coin = jax.random.bernoulli(k_inj, rate, (n_ep,)) & active
+        want = coin & (sq_count < Qs)
+        dropped = (coin & (sq_count >= Qs)).sum()
+        dst_ep = sample(k_dst)
+        dst_r = core.ep_router[dst_ep]
+        inter, phase = core.route_decision(dst_r, occ, k_rt)
+        new_pkt = pack_record(dst_r, inter, cycle,
+                              jnp.zeros((n_ep,), jnp.int32), phase)
+        sq_pkt, sq_count = core.inject(sq_pkt, sq_count, want, new_pkt)
+        injected = want.sum()
+
+        # ---- shared switch pipeline ---------------------------------------
+        (nq_pkt, nq_count, sq_pkt, sq_count,
+         (delivered, lat_sum)) = core.alloc(
+             nq_pkt, nq_count, sq_pkt, sq_count,
+             occ, cycle, _open_loop_fold,
+             (jnp.int32(0), jnp.float32(0.0)))
+
+        in_flight = (nq_count.sum() + sq_count.sum()).astype(jnp.int32)
+        stats = (injected.astype(jnp.int32), delivered,
+                 lat_sum, sq_count.sum().astype(jnp.int32),
+                 dropped.astype(jnp.int32), in_flight)
+        return (nq_pkt, nq_count, sq_pkt, sq_count, key), stats
+
+    return step
+
+
 def _open_loop_runner(tables: SimTables, traffic: Traffic, cfg: SimConfig):
+    """Compiled (carry0, rate) -> (final carry, per-cycle stats), with
+    the initial carry DONATED (its buffers are reused for the scan
+    state, DESIGN.md §10) and the tables baked in as constants."""
     key = (id(tables), id(traffic), cfg.static_key())
     hit = _OPEN_LOOP_CACHE.get(key)
     if hit is not None and hit[0] is tables and hit[1] is traffic:
         return hit[2]
 
     core = SwitchCore(tables, cfg)
-    active = jnp.asarray(traffic.active)
-    n_ep, Qs = core.n_ep, core.Qs
-    sample = traffic.sample
 
-    def run(rate, key0):
-        def step(carry, cycle):
-            nq_pkt, nq_count, sq_pkt, sq_count, key = carry
-            key, k_inj, k_dst, k_rt = jax.random.split(key, 4)
-
-            occ = core.occupancy(nq_count)
-
-            # ---- injection ------------------------------------------------
-            coin = jax.random.bernoulli(k_inj, rate, (n_ep,)) & active
-            want = coin & (sq_count < Qs)
-            dropped = (coin & (sq_count >= Qs)).sum()
-            dst_ep = sample(k_dst)
-            dst_r = core.ep_router[dst_ep]
-            inter, phase = core.route_decision(dst_r, occ, k_rt)
-            new_pkt = pack_record(dst_r, inter, cycle,
-                                  jnp.zeros((n_ep,), jnp.int32), phase)
-            sq_pkt, sq_count = core.inject(sq_pkt, sq_count, want, new_pkt)
-            injected = want.sum()
-
-            # ---- shared switch pipeline -----------------------------------
-            (nq_pkt, nq_count, sq_pkt, sq_count,
-             (delivered, lat_sum)) = core.alloc(
-                 nq_pkt, nq_count, sq_pkt, sq_count,
-                 occ, cycle, _open_loop_fold,
-                 (jnp.int32(0), jnp.float32(0.0)))
-
-            in_flight = (nq_count.sum() + sq_count.sum()).astype(jnp.int32)
-            stats = (injected.astype(jnp.int32), delivered,
-                     lat_sum, sq_count.sum().astype(jnp.int32),
-                     dropped.astype(jnp.int32), in_flight)
-            return (nq_pkt, nq_count, sq_pkt, sq_count, key), stats
-
-        carry = core.init_queues() + (key0,)
+    def run(carry, rate):
+        step = _open_loop_step(core, traffic, rate)
         cycles = jnp.arange(cfg.cycles, dtype=jnp.int32)
-        _, stats = jax.lax.scan(step, carry, cycles)
-        return stats
+        carry, stats = jax.lax.scan(step, carry, cycles)
+        # the final carry is returned (and dropped by callers) so the
+        # DONATED initial carry has aliasable targets: the queue-state
+        # buffers are reused in place instead of being double-allocated
+        # (peak-memory assertion in tests/test_engine_scaling.py)
+        return carry, stats
 
-    fn = jax.jit(run)
-    _cache_put(_OPEN_LOOP_CACHE, key, (tables, traffic, fn))
-    return fn
+    fn = jax.jit(run, donate_argnums=(0,))
+    _cache_put(_OPEN_LOOP_CACHE, key, (tables, traffic, (core, fn)))
+    return core, fn
 
 
-def simulate(tables: SimTables, traffic: Traffic, cfg: SimConfig) -> SimResult:
-    n_active = int(traffic.active.sum())
-    run = _open_loop_runner(tables, traffic, cfg)
-    inj, dlv, lat, occ_s, drop, infl = run(
-        jnp.float32(cfg.injection_rate), jax.random.PRNGKey(cfg.seed))
-
+def _assemble_result(tables: SimTables, traffic: Traffic, cfg: SimConfig,
+                     n_active: int, stats: tuple) -> SimResult:
+    """Host-side reduction of per-cycle scan stats into a SimResult
+    (shared by `simulate` and the lane-batched sweep engine)."""
+    inj, dlv, lat, occ_s, drop, infl = stats
     inj = np.asarray(inj, dtype=np.int64)
     dlv = np.asarray(dlv, dtype=np.int64)
     lat = np.asarray(lat, dtype=np.float64)
@@ -573,3 +654,11 @@ def simulate(tables: SimTables, traffic: Traffic, cfg: SimConfig) -> SimResult:
         per_cycle_in_flight=infl,
         per_cycle_dropped=drop,
     )
+
+
+def simulate(tables: SimTables, traffic: Traffic, cfg: SimConfig) -> SimResult:
+    n_active = int(traffic.active.sum())
+    core, fn = _open_loop_runner(tables, traffic, cfg)
+    carry0 = core.init_queues() + (jax.random.PRNGKey(cfg.seed),)
+    _, stats = fn(carry0, jnp.float32(cfg.injection_rate))
+    return _assemble_result(tables, traffic, cfg, n_active, stats)

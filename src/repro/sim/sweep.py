@@ -1,0 +1,212 @@
+"""Lane-batched sweep engine (DESIGN.md §10).
+
+Every figure in the paper is a *sweep*: latency/throughput vs injected
+load (Fig 6), resiliency metrics vs failure fraction (Table III),
+workload JCT vs routing mode.  Run sequentially, a sweep pays a Python
+round-trip per point — and, when the points differ by a failure mask,
+a full XLA recompile per point, because the single-lane runners bake
+the mask-dependent tables into the trace as constants (deliberately:
+XLA specialises the per-cycle gathers against them, DESIGN.md §10).
+Here, and only here, the tables of mask-varying lanes are lifted into
+traced OPERANDS, so one compile serves every mask.
+
+This module stacks L sweep points that differ only in DATA (injection
+rate, PRNG seed, failure edge-mask / degraded tables) into a leading
+*lane* axis and runs them as ONE jax.vmap-ed scan: one trace, one
+compile, one device launch for the whole sweep.  Anything that changes
+SHAPE or the traced graph — topology, routing mode, cycle count, VC
+count, kernel path — still (necessarily) forces its own compile and
+must be equal across lanes.
+
+Lane semantics are exact: per-lane results are bit-identical to L
+sequential `simulate` / `run_workload` calls with the same configs
+(tests/test_sweep.py) because jax.vmap maps every primitive — including
+the allocation kernels, whose pallas grids grow a trailing lane
+dimension under batching — without changing per-lane values.
+
+  - `sweep_simulate`: open-loop Bernoulli engine over (rate, seed,
+    tables) lanes -> [SimResult per lane];
+  - `sweep_run_workload`: closed-loop workload engine over (seed,
+    tables) lanes -> [WorkloadResult per lane]; the chunked host loop
+    early-exits when EVERY lane has completed (completed lanes idle
+    inertly: all messages sent and drained, counters guarded);
+  - L == 1 degenerates to the exact single-lane code path
+    (`simulate` / `run_workload`), so callers can sweep
+    unconditionally.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import (SimConfig, SimResult, SwitchCore, _assemble_result,
+                     _cache_put, _open_loop_step, simulate,
+                     tables_signature)
+from .tables import SimTables
+from .traffic import Traffic
+
+__all__ = ["sweep_simulate", "sweep_run_workload", "lane_tables"]
+
+TablesLanes = Union[SimTables, Sequence[SimTables]]
+
+
+def lane_tables(tables: TablesLanes) -> SimTables:
+    """Normalise a tables argument to one (possibly stacked) SimTables."""
+    if isinstance(tables, SimTables):
+        return tables
+    tables = list(tables)
+    if len(tables) == 1:
+        return tables[0]
+    return SimTables.stack(tables)
+
+
+def _lane_count(name_and_lens: list) -> int:
+    """Infer L from per-argument lane counts; 1 broadcasts, anything
+    else must agree exactly (the ragged-lane guard)."""
+    L = 1
+    for name, n in name_and_lens:
+        if n == 1:
+            continue
+        if L == 1:
+            L = n
+        elif n != L:
+            ragged = {name: n for name, n in name_and_lens}
+            raise ValueError(
+                f"ragged lanes: {ragged} — lane-varying arguments must "
+                f"all have the same length (or length 1 to broadcast)")
+    return L
+
+
+def _as_list(x, scalar_types) -> list:
+    if x is None:
+        return [None]
+    if isinstance(x, scalar_types):
+        return [x]
+    return list(x)
+
+
+# sweep-runner cache, FIFO-bounded alongside the engine's.  Two key
+# regimes: lanes sharing one table set keep it as closure constants
+# (same gather specialisation as the single-lane path) and key by
+# table identity; mask-varying sweeps lift the tables into traced
+# operands and key STRUCTURALLY (tables_signature), so every set of
+# failure samples of one topology reuses one executable.
+_SWEEP_CACHE: dict = {}
+
+
+def _sweep_runner(tables0: SimTables, traffic: Traffic, cfg: SimConfig,
+                  L: int, tables_vary: bool):
+    tab_key = (tables_signature(tables0) if tables_vary
+               else id(tables0))
+    key = (tab_key, id(traffic), cfg.static_key(), L, tables_vary)
+    hit = _SWEEP_CACHE.get(key)
+    if hit is not None and hit[0] is traffic and \
+            (tables_vary or hit[1] is tables0):
+        return hit[2]
+
+    core = SwitchCore(tables0, cfg)
+
+    def scan_lane(c, carry, rate):
+        step = _open_loop_step(c, traffic, rate)
+        cycles = jnp.arange(cfg.cycles, dtype=jnp.int32)
+        return jax.lax.scan(step, carry, cycles)
+
+    if tables_vary:
+        # per-lane masks: tables ride the lane axis as operands
+        def run_lane(table_ops, carry, rate):
+            return scan_lane(core.bind_tables(table_ops), carry, rate)
+
+        table_axes = jax.tree_util.tree_map(lambda _: 0,
+                                            core.table_operands())
+        fn = jax.jit(jax.vmap(run_lane, in_axes=(table_axes, 0, 0)),
+                     donate_argnums=(1,))
+    else:
+        # shared tables: keep them as constants (XLA specialises the
+        # per-cycle gathers; the lane vmap batches only the state)
+        def run_shared(carry, rate):
+            return scan_lane(core, carry, rate)
+
+        fn = jax.jit(jax.vmap(run_shared, in_axes=(0, 0)),
+                     donate_argnums=(0,))
+    _cache_put(_SWEEP_CACHE, key, (traffic, tables0, (core, fn)))
+    return core, fn
+
+
+def sweep_simulate(tables: TablesLanes, traffic: Traffic, cfg: SimConfig,
+                   rates: Optional[Sequence[float]] = None,
+                   seeds: Optional[Sequence[int]] = None) -> list:
+    """Run L open-loop simulations as one compiled, lane-batched scan.
+
+    tables : SimTables, stacked SimTables, or a list of same-shape
+             SimTables (e.g. per-failure-sample rebuilds); a single
+             table set is shared by every lane.
+    rates  : per-lane injection rates (default: cfg.injection_rate).
+    seeds  : per-lane PRNG seeds (default: cfg.seed).
+
+    Length-1 arguments broadcast to L; mismatched lengths raise
+    (ragged-lane guard).  Returns [SimResult] * L, bit-identical per
+    lane to the sequential `simulate` loop.
+    """
+    tab = lane_tables(tables)
+    rates_l = _as_list(rates, (int, float, np.integer, np.floating))
+    seeds_l = _as_list(seeds, (int, np.integer))
+    L = _lane_count([("tables", tab.lanes), ("rates", len(rates_l)),
+                     ("seeds", len(seeds_l))])
+
+    rates_l = [cfg.injection_rate if r is None else float(r)
+               for r in rates_l] * (L if len(rates_l) == 1 else 1)
+    seeds_l = [cfg.seed if s is None else int(s)
+               for s in seeds_l] * (L if len(seeds_l) == 1 else 1)
+    cfgs = [dataclasses.replace(cfg, injection_rate=rates_l[i],
+                                seed=seeds_l[i]) for i in range(L)]
+
+    if L == 1:
+        # degenerate sweep: exactly today's single-lane path
+        return [simulate(tab.lane(0), traffic, cfgs[0])]
+
+    tables_vary = tab.lanes > 1
+    core, fn = _sweep_runner(tab.lane(0), traffic, cfg, L,
+                             tables_vary=tables_vary)
+
+    carry0 = tuple(jnp.zeros((L,) + q.shape, q.dtype)
+                   for q in core.init_queues())
+    keys0 = jnp.stack([jax.random.PRNGKey(s) for s in seeds_l])
+    carry0 = carry0 + (keys0,)
+    rate_v = jnp.asarray(rates_l, jnp.float32)
+
+    if tables_vary:
+        # the stacked mask tables ride the lane axis as one operand
+        _, stats = fn(SwitchCore.device_tables(tab), carry0, rate_v)
+    else:
+        _, stats = fn(carry0, rate_v)
+
+    n_active = int(traffic.active.sum())
+    out = []
+    for i in range(L):
+        lane_stats = tuple(np.asarray(s)[i] for s in stats)
+        out.append(_assemble_result(tab.lane(i if tab.lanes > 1 else 0),
+                                    traffic, cfgs[i], n_active, lane_stats))
+    return out
+
+
+def sweep_run_workload(tables: TablesLanes, wl, cfg=None,
+                       seeds: Optional[Sequence[int]] = None,
+                       ep_of_rank: Optional[np.ndarray] = None) -> list:
+    """Closed-loop analogue of `sweep_simulate`: run workload `wl` on L
+    (tables, seed) lanes in one compiled chunk loop.
+
+    The chunked host loop runs until EVERY lane has completed (or
+    cfg.max_cycles); per-lane makespans and message stats are
+    bit-identical to sequential `run_workload` calls.  Returns
+    [WorkloadResult] * L.
+    """
+    # local import: workloads imports the engine (avoid a cycle)
+    from .workloads import closed_loop
+
+    return closed_loop._sweep_run_workload(
+        lane_tables(tables), wl, cfg, seeds=seeds, ep_of_rank=ep_of_rank)

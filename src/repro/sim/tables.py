@@ -31,6 +31,13 @@ class SimTables:
     Ports of router r: 0..deg(r)-1 network ports (order = sorted neighbor
     ids of the healthy fabric); the ejection "port" is virtual
     (engine-side).  Dead ports (link failures) hold -1.
+
+    Lane stacking (DESIGN.md §10): :meth:`stack` bundles L same-shape
+    table sets (e.g. per-failure-sample degraded rebuilds of one
+    topology) into one object whose per-lane arrays carry a leading
+    [L] axis (``lanes > 1``); :meth:`lane` slices one lane back out.
+    Stacked tables are consumed by `repro.sim.sweep`, never by
+    `SwitchCore` directly.
     """
     topo: Topology
     n_routers: int
@@ -43,10 +50,72 @@ class SimTables:
     ep_router: np.ndarray         # [N_ep] router id of each endpoint
     ecmp_ports: Optional[np.ndarray] = None   # [N, N, M] int16 equal-cost
     failed_edges: Optional[np.ndarray] = None  # [K, 2] mask these tables saw
+    lanes: int = 1                # >1: per-lane arrays have a leading L axis
+
+    # arrays that grow the leading lane axis under stack() — exactly the
+    # ones SwitchCore moves to device and the sweep engine feeds to
+    # jax.vmap as traced operands
+    LANE_FIELDS = ("nbr", "rev_port", "port_toward", "dist", "ecmp_ports")
 
     @property
     def n_endpoints(self) -> int:
         return len(self.ep_router)
+
+    @classmethod
+    def stack(cls, tables: "list[SimTables]") -> "SimTables":
+        """Bundle L single-lane table sets into one lane-stacked object.
+
+        All lanes must describe the same fabric shape: identical
+        router/port/endpoint counts and endpoint placement (true by
+        construction for failure-sample rebuilds of one topology).
+        ``ecmp_ports`` widths may differ per lane (equal-cost set sizes
+        depend on the mask); they are right-padded with -1 to the
+        widest lane, which is grant-for-grant invariant in the engine
+        (pad ports score BIG and can never win an argmin).
+        """
+        assert len(tables) >= 1, "stack() needs at least one lane"
+        base = tables[0]
+        for t in tables:
+            assert t.lanes == 1, "stack() takes single-lane tables"
+            assert (t.n_routers, t.P, t.p) == (base.n_routers, base.P,
+                                               base.p), \
+                "lane shape mismatch (different topologies?)"
+            assert np.array_equal(t.ep_router, base.ep_router), \
+                "lanes must share endpoint placement"
+            assert (t.ecmp_ports is None) == (base.ecmp_ports is None), \
+                "mixed ecmp/non-ecmp lanes"
+        if base.ecmp_ports is not None:
+            width = max(t.ecmp_ports.shape[-1] for t in tables)
+
+            def pad_ecmp(e):
+                if e.shape[-1] == width:
+                    return e
+                pad = np.full(e.shape[:-1] + (width - e.shape[-1],), -1,
+                              dtype=e.dtype)
+                return np.concatenate([e, pad], axis=-1)
+            ecmp = np.stack([pad_ecmp(t.ecmp_ports) for t in tables])
+        else:
+            ecmp = None
+        return cls(
+            topo=base.topo, n_routers=base.n_routers, P=base.P, p=base.p,
+            nbr=np.stack([t.nbr for t in tables]),
+            rev_port=np.stack([t.rev_port for t in tables]),
+            port_toward=np.stack([t.port_toward for t in tables]),
+            dist=np.stack([t.dist for t in tables]),
+            ep_router=base.ep_router, ecmp_ports=ecmp,
+            failed_edges=None, lanes=len(tables))
+
+    def lane(self, i: int) -> "SimTables":
+        """Single-lane view of lane `i` of a stacked table set."""
+        if self.lanes == 1:
+            assert i == 0, i
+            return self
+        return dataclasses.replace(
+            self, nbr=self.nbr[i], rev_port=self.rev_port[i],
+            port_toward=self.port_toward[i], dist=self.dist[i],
+            ecmp_ports=(None if self.ecmp_ports is None
+                        else self.ecmp_ports[i]),
+            lanes=1)
 
     @classmethod
     def build(cls, topo: Topology, rt: Optional[RoutingTables] = None,

@@ -5,6 +5,16 @@ Each pattern is a `Traffic` with:
   - sample(key) -> int32 [N_ep] destination endpoint per source
 Deterministic patterns ignore the key.  Bit-permutation patterns activate
 the largest power-of-two subset of endpoints (paper §V-B: 8192 of ~10K).
+
+Lane contract (DESIGN.md §10): `sample` must be a pure jax function of
+its key — the sweep engine vmaps it over per-lane keys, so stochastic
+patterns draw an independent stream per lane while deterministic
+patterns broadcast.  The injection RATE is not traffic state at all
+(it is a traced operand of the engine), which is what lets one
+compiled Traffic serve every lane of a load sweep.  A pattern derived
+from a specific table set (`worstcase_sf`) is shared across failure
+lanes: the adversarial pairing is fixed on the healthy fabric and the
+lanes measure how each mask degrades it.
 """
 
 from __future__ import annotations

@@ -32,7 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..engine import BIG, SimConfig, SwitchCore, _cache_put
+from ..engine import (BIG, SimConfig, SwitchCore, _cache_put,
+                      tables_signature)
 from ..packed import MAX_MSGS, pack_record, pk_msg
 from ..tables import SimTables
 from .ir import Workload
@@ -106,8 +107,12 @@ class WorkloadResult:
 
 
 # (tables, workload, placement-bytes, static-config) -> compiled chunk
-# runner; values pin the keyed objects against id() reuse, and the
-# shared FIFO bound caps compiled-executable retention.
+# runner.  The single-lane runner keeps the tables as closure constants
+# (gather specialisation, see repro.sim.engine) and so recompiles per
+# failure mask; the lane-batched sweep below lifts them into operands
+# so all masks of one topology share one executable (DESIGN.md §10).
+# Values pin the keyed objects against id() reuse, and the shared FIFO
+# bound caps compiled-executable retention.
 _RUNNER_CACHE: dict = {}
 
 
@@ -150,12 +155,17 @@ def _chunk_runner(tables: SimTables, wl: Workload, ep_of_rank: np.ndarray,
                      + g_src.sum().astype(jnp.int32))
         return flits_del, delivered
 
-    def step(carry, cycle):
+    def make_step(c):
+        """Step closure over a table-bound core (rank-polymorphic: the
+        sweep engine vmaps it over a lane axis, DESIGN.md §10)."""
+        return lambda carry, cycle: step(c, carry, cycle)
+
+    def step(c, carry, cycle):
         (nq_pkt, nq_count, sq_pkt, sq_count,
          sent, flits_del, start_c, done_c, key) = carry
         key, k_rt = jax.random.split(key)
 
-        occ = core.occupancy(nq_count)
+        occ = c.occupancy(nq_count)
 
         # ---- ready set over the DAG (dense mask, carried counters)
         done = flits_del >= size                            # [M]
@@ -172,18 +182,18 @@ def _chunk_runner(tables: SimTables, wl: Workload, ep_of_rank: np.ndarray,
         # ---- inject one flit (same source-queue mechanics as open loop)
         want = has & (sq_count < Qs)
         dst_r = dst_r_of_msg[mpick]
-        inter, phase = core.route_decision(dst_r, occ, k_rt)
+        inter, phase = c.route_decision(dst_r, occ, k_rt)
         new_pkt = pack_record(dst_r, inter, cycle,
                               jnp.zeros((n_ep,), jnp.int32), phase,
                               msg=mpick)
-        sq_pkt, sq_count = core.inject(sq_pkt, sq_count, want, new_pkt)
+        sq_pkt, sq_count = c.inject(sq_pkt, sq_count, want, new_pkt)
         msel = jnp.where(want, mpick, M)                    # M = OOB drop
         sent = sent.at[msel].add(1, mode="drop")
         start_c = start_c.at[msel].min(cycle, mode="drop")
 
         # ---- shared switch pipeline with the per-message fold
         (nq_pkt, nq_count, sq_pkt, sq_count,
-         (flits_del, delivered)) = core.alloc(
+         (flits_del, delivered)) = c.alloc(
              nq_pkt, nq_count, sq_pkt, sq_count,
              occ, cycle, fold, (flits_del, jnp.int32(0)))
 
@@ -194,9 +204,14 @@ def _chunk_runner(tables: SimTables, wl: Workload, ep_of_rank: np.ndarray,
         return (nq_pkt, nq_count, sq_pkt, sq_count,
                 sent, flits_del, start_c, done_c, key), stats
 
-    def run_chunk(carry, offset):
+    def run_chunk_const(carry, offset):
         cycles = offset + jnp.arange(cfg.chunk, dtype=jnp.int32)
-        return jax.lax.scan(step, carry, cycles)
+        return jax.lax.scan(make_step(core), carry, cycles)
+
+    def run_chunk_ops(table_ops, carry, offset):
+        c = core.bind_tables(table_ops)
+        cycles = offset + jnp.arange(cfg.chunk, dtype=jnp.int32)
+        return jax.lax.scan(make_step(c), carry, cycles)
 
     def init_carry(key0):
         return core.init_queues() + (
@@ -206,9 +221,41 @@ def _chunk_runner(tables: SimTables, wl: Workload, ep_of_rank: np.ndarray,
             jnp.full((M,), BIG, jnp.int32),                 # done cycle
             key0)
 
-    fn = (jax.jit(run_chunk), init_carry)
+    # the carry is donated: it is threaded through every chunk call and
+    # aliases the returned carry, so queue state is updated in place
+    # across the whole chunked run (DESIGN.md §10).  run_chunk_ops is
+    # the operand-tables variant the mask-varying lane sweep vmaps.
+    fn = (jax.jit(run_chunk_const, donate_argnums=(0,)), init_carry,
+          (run_chunk_const, run_chunk_ops))
     _cache_put(_RUNNER_CACHE, key, (tables, wl, fn))
     return fn
+
+
+def _workload_result(wl: Workload, cfg: WorkloadSimConfig,
+                     ep_of_rank: np.ndarray, msg_state: tuple,
+                     per_cycle_dlv: np.ndarray, completed: bool,
+                     cycles_run: int) -> WorkloadResult:
+    """Host-side reduction of final message counters into a
+    WorkloadResult (shared by `run_workload` and the lane sweep)."""
+    sent, flits_del, start_c, done_c = (
+        np.asarray(a, dtype=np.int64) for a in msg_state)
+    big = int(BIG)
+    msg_start = np.where(start_c < big, start_c, -1)
+    msg_done = np.where(done_c < big, done_c, -1)
+    makespan = float(done_c.max()) if completed else float("inf")
+
+    return WorkloadResult(
+        name=wl.name, mode=cfg.mode, placement=cfg.placement,
+        n_ranks=wl.n_ranks, n_messages=wl.n_messages, completed=completed,
+        makespan=makespan, cycles_run=cycles_run,
+        flits_injected=int(sent.sum()),
+        flits_delivered=int(flits_del.sum()),
+        msg_size=wl.size.copy(), msg_phase=wl.phase.copy(),
+        msg_sent=sent, msg_delivered=flits_del,
+        msg_start=msg_start, msg_done=msg_done,
+        per_cycle_delivered=per_cycle_dlv,
+        ep_of_rank=ep_of_rank,
+    )
 
 
 def run_workload(tables: SimTables, wl: Workload,
@@ -219,7 +266,7 @@ def run_workload(tables: SimTables, wl: Workload,
         ep_of_rank = place_ranks(tables, wl.n_ranks, cfg.placement,
                                  seed=cfg.seed)
     ep_of_rank = np.asarray(ep_of_rank, dtype=np.int32)
-    run_chunk, init_carry = _chunk_runner(tables, wl, ep_of_rank, cfg)
+    run_chunk, init_carry, _ = _chunk_runner(tables, wl, ep_of_rank, cfg)
 
     carry = init_carry(jax.random.PRNGKey(cfg.seed))
     M = wl.n_messages
@@ -235,24 +282,107 @@ def run_workload(tables: SimTables, wl: Workload,
             break
 
     (_, _, _, _, sent, flits_del, start_c, done_c, _) = carry
-    sent = np.asarray(sent, dtype=np.int64)
-    flits_del = np.asarray(flits_del, dtype=np.int64)
-    start_c = np.asarray(start_c, dtype=np.int64)
-    done_c = np.asarray(done_c, dtype=np.int64)
-    big = int(BIG)
-    msg_start = np.where(start_c < big, start_c, -1)
-    msg_done = np.where(done_c < big, done_c, -1)
-    makespan = float(done_c.max()) if completed else float("inf")
+    return _workload_result(wl, cfg, ep_of_rank,
+                            (sent, flits_del, start_c, done_c),
+                            np.concatenate(per_cycle_dlv), completed, t)
 
-    return WorkloadResult(
-        name=wl.name, mode=cfg.mode, placement=cfg.placement,
-        n_ranks=wl.n_ranks, n_messages=M, completed=completed,
-        makespan=makespan, cycles_run=t,
-        flits_injected=int(sent.sum()),
-        flits_delivered=int(flits_del.sum()),
-        msg_size=wl.size.copy(), msg_phase=wl.phase.copy(),
-        msg_sent=sent, msg_delivered=flits_del,
-        msg_start=msg_start, msg_done=msg_done,
-        per_cycle_delivered=np.concatenate(per_cycle_dlv),
-        ep_of_rank=ep_of_rank,
-    )
+
+def _sweep_run_workload(tables: SimTables, wl: Workload,
+                        cfg: Optional[WorkloadSimConfig] = None,
+                        seeds=None,
+                        ep_of_rank: Optional[np.ndarray] = None) -> list:
+    """Lane-batched closed-loop runs over (tables, seed) lanes — the
+    implementation behind `repro.sim.sweep.sweep_run_workload`.
+
+    One vmap-ed chunk runner is compiled for all L lanes; the host
+    loop keeps stepping until every lane reports all messages done (a
+    finished lane idles inertly: nothing sendable, queues drained,
+    done/start counters guarded against rewrite).  Per-lane results
+    are bit-identical to sequential `run_workload` calls.
+    """
+    from ..sweep import _lane_count
+
+    cfg = cfg or WorkloadSimConfig()
+    seeds_l = ([cfg.seed] if seeds is None
+               else [int(s) for s in np.atleast_1d(seeds)])
+    L = _lane_count([("tables", tables.lanes), ("seeds", len(seeds_l))])
+    seeds_l = seeds_l * (L if len(seeds_l) == 1 else 1)
+    cfgs = [dataclasses.replace(cfg, seed=s) for s in seeds_l]
+
+    if L == 1:
+        return [run_workload(tables.lane(0), wl, cfgs[0],
+                             ep_of_rank=ep_of_rank)]
+
+    tab0 = tables.lane(0)
+    if ep_of_rank is None:
+        # placement must be lane-invariant (it shapes msgs_by_ep and is
+        # baked into the compiled step); a seed-sensitive placement
+        # with per-lane seeds would silently break the bit-exactness
+        # contract, so refuse it instead of placing all lanes with one
+        # seed
+        placements = [place_ranks(tab0, wl.n_ranks, cfg.placement,
+                                  seed=s) for s in seeds_l]
+        if any(not np.array_equal(p, placements[0])
+               for p in placements[1:]):
+            raise ValueError(
+                f"placement {cfg.placement!r} depends on the seed, so "
+                f"per-lane seeds would place ranks differently per "
+                f"lane; pass ep_of_rank= explicitly to pin one "
+                f"placement for every lane")
+        ep_of_rank = placements[0]
+    ep_of_rank = np.asarray(ep_of_rank, dtype=np.int32)
+    tables_vary = tables.lanes > 1
+    _, init_carry, (chunk_const, chunk_ops) = _chunk_runner(
+        tab0, wl, ep_of_rank, cfg)
+
+    # mask-varying sweeps key structurally (one executable for any set
+    # of failure samples of this topology); shared-table sweeps keep
+    # the constants and key by table identity, like the single-lane path
+    tab_key = tables_signature(tab0) if tables_vary else id(tab0)
+    key = ("sweep", tab_key, id(wl), ep_of_rank.tobytes(),
+           cfg.static_key(), L, tables_vary)
+    hit = _RUNNER_CACHE.get(key)
+    if hit is not None and hit[0] is wl and \
+            (tables_vary or hit[1] is tab0):
+        fn = hit[2]
+    else:
+        if tables_vary:
+            table_axes = jax.tree_util.tree_map(
+                lambda _: 0, SwitchCore.device_tables(tab0))
+            fn = jax.jit(jax.vmap(chunk_ops,
+                                  in_axes=(table_axes, 0, None)),
+                         donate_argnums=(1,))
+        else:
+            fn = jax.jit(jax.vmap(chunk_const, in_axes=(0, None)),
+                         donate_argnums=(0,))
+        _cache_put(_RUNNER_CACHE, key, (wl, tab0, fn))
+
+    lanes0 = [init_carry(jax.random.PRNGKey(s)) for s in seeds_l]
+    carry = tuple(jnp.stack([l[i] for l in lanes0])
+                  for i in range(len(lanes0[0])))
+    table_ops = SwitchCore.device_tables(tables) if tables_vary else None
+
+    M = wl.n_messages
+    per_cycle_dlv = []
+    done_lane = np.zeros(L, dtype=bool)
+    t = 0
+    while t < cfg.max_cycles:
+        if tables_vary:
+            carry, (inj, dlv, n_done) = fn(table_ops, carry, jnp.int32(t))
+        else:
+            carry, (inj, dlv, n_done) = fn(carry, jnp.int32(t))
+        per_cycle_dlv.append(np.asarray(dlv, dtype=np.int64))   # [L, chunk]
+        t += cfg.chunk
+        done_lane = np.asarray(n_done)[:, -1] == M
+        if done_lane.all():
+            break
+
+    (_, _, _, _, sent, flits_del, start_c, done_c, _) = carry
+    dlv_all = np.concatenate(per_cycle_dlv, axis=1)             # [L, t]
+    out = []
+    for i in range(L):
+        out.append(_workload_result(
+            wl, cfgs[i], ep_of_rank,
+            (sent[i], flits_del[i], start_c[i], done_c[i]),
+            dlv_all[i], bool(done_lane[i]), t))
+    return out

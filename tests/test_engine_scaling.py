@@ -204,7 +204,113 @@ def test_q17_saturated_sim_no_wraparound():
     assert r.delivered > 0 and r.avg_latency > 0
 
 
+# ------------------------------------------------- donation / peak memory --
+def test_donated_carry_stays_donatable():
+    """The scan carry is donated (jax.jit donate_argnums) and must keep
+    an aliasable target: if aliasing breaks, jax emits the 'Some
+    donated buffers were not usable' UserWarning again."""
+    import warnings
+
+    tables = SimTables.build(cached_slimfly(5))
+    tr = make_traffic(tables, "uniform")
+    cfg = SimConfig(injection_rate=0.3, cycles=30, warmup=0, mode="min",
+                    seed=11)
+    simulate(tables, tr, cfg)                    # compile outside the net
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", UserWarning)
+        r = simulate(tables, tr, dataclasses.replace(cfg, seed=12))
+    assert r.delivered > 0
+
+
+def test_steady_state_memory_bounded():
+    """Steady-state re-execution of the compiled scan must not grow the
+    process high-water mark by more than a loose cap (a donation or
+    buffer-retention regression shows up as per-call growth on the
+    order of the full queue state x cycles)."""
+    from repro.bench import peak_memory_bytes
+
+    tables = SimTables.build(cached_slimfly(7))
+    tr = make_traffic(tables, "uniform")
+    state = {"seed": 20}
+
+    def call():
+        cfg = SimConfig(injection_rate=0.3, cycles=60, warmup=0,
+                        mode="min", seed=state["seed"])
+        state["seed"] += 1
+        simulate(tables, tr, cfg)
+
+    call()                                       # compile + set the HWM
+    peak, probe = peak_memory_bytes(call, cheap=True)
+    assert probe in ("rss", "rss-total", "none")
+    if probe == "rss":                           # the HWM moved: bound it
+        assert peak < 256 * 1024 * 1024, peak
+
+
 # --------------------------------------------------------- bench harness --
+def test_rss_probe_never_null():
+    """The cheap RSS probe (paper-scale entries) always yields a
+    number on Linux — peak_mem_bytes must not be null at q=17 again."""
+    from repro.bench import peak_memory_bytes, rss_hwm_bytes
+
+    assert rss_hwm_bytes() is None or rss_hwm_bytes() > 0
+
+    peak, probe = peak_memory_bytes(lambda: np.zeros(1 << 22), cheap=True)
+    if probe != "none":                          # /proc or getrusage found
+        assert peak is not None and peak > 0
+        assert probe in ("rss", "rss-total")
+
+    e = bench_callable("toy/rss", lambda: None, repeats=1,
+                       measure_memory="rss")
+    assert e.mem_probe in ("rss", "rss-total", "none")
+    if e.mem_probe != "none":
+        assert e.peak_mem_bytes is not None
+
+
+def test_enable_compilation_cache_states(tmp_path, monkeypatch):
+    """REPRO_CACHE_DIR knob: off when unset, cold on an empty dir,
+    warm once the dir holds serialized executables."""
+    import jax
+
+    from repro.bench import enable_compilation_cache
+
+    monkeypatch.delenv("REPRO_CACHE_DIR", raising=False)
+    assert enable_compilation_cache() == ("off", None)
+
+    cache = tmp_path / "jc"
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(cache))
+    try:
+        state, d = enable_compilation_cache()
+        assert state == "cold" and d == str(cache) and cache.is_dir()
+        (cache / "jit_foo-0123-cache").write_bytes(b"x")
+        state, _ = enable_compilation_cache()
+        assert state == "warm"
+    finally:
+        # don't leave the suite persisting executables into tmp_path
+        jax.config.update("jax_compilation_cache_dir", None)
+
+
+def test_bench_extra_metrics_roundtrip(tmp_path):
+    """extra_metrics (sweep_points_per_sec & co) serialize beside the
+    standard fields and are addressable by check_regression."""
+    from repro.bench import BenchEntry
+
+    e = BenchEntry(name="sweep/q0/t", wall_s=2.0, wall_mean_s=2.0,
+                   compile_s=1.0, repeats=1, cycles=100,
+                   meta={"lanes": 5},
+                   extra_metrics={"sweep_points_per_sec": 2.5})
+    path = tmp_path / "BENCH_x.json"
+    write_bench(str(path), "engine_scaling", [e])
+    doc = load_bench(str(path))
+    ent = doc["entries"]["sweep/q0/t"]
+    assert ent["sweep_points_per_sec"] == 2.5
+    ok, msg = check_regression(doc, "sweep/q0/t", "sweep_points_per_sec",
+                               1.0, factor=2.0, higher_is_better=True)
+    assert not ok and "REGRESSION" in msg
+    ok, _ = check_regression(doc, "sweep/q0/t", "sweep_points_per_sec",
+                             1.5, factor=2.0, higher_is_better=True)
+    assert ok
+
+
 def test_bench_harness_roundtrip(tmp_path):
     calls = []
 
