@@ -1,0 +1,187 @@
+"""Multi-tenant job interference: SF vs Dragonfly vs fat tree at the
+matched radix/cost points the JCT benchmark uses (DESIGN.md §11; the
+deployment question of Blach et al., arXiv:2310.03742 — how much do
+co-located jobs slow each other down on each fabric?).
+
+A fixed mix of 2-4 jobs (ring all-reduce, all-to-all, stencil, graph
+scatter) with staggered arrival cycles runs as ONE closed-loop
+simulation per (fabric, placement policy) point via
+`repro.sim.workloads.jobs.run_jobs`; each job is also run ALONE on its
+exact shared-run placement to get the isolated baseline.  Reported per
+job: JCT (arrival -> completion, queueing included), JCT slowdown vs
+alone, and tail inflation = p99(message latency shared) / p99(alone).
+Per (fabric, policy): collective slowdown = mean of per-job slowdowns.
+
+fast mode: q=5 Slim Fly, 3 jobs, pack vs spread vs rack-aware.
+REPRO_SMOKE=1: 2 jobs, pack vs spread (CI pipeline exercise).
+REPRO_FULL=1: q=7 fabrics, 4 jobs, bigger payloads.
+
+Run directly (``python -m benchmarks.multitenant``) it also times the
+steady-state multi-job chunk loop on SF q=5 and appends a
+``multitenant/q5`` entry to BENCH_engine.json via `repro.bench`
+(REPRO_BENCH_OUT overrides the path; indirect runs never touch the
+committed baseline).
+"""
+
+import os
+
+import numpy as np
+
+from repro.core import build_slimfly
+from repro.core.topologies import build_dragonfly, build_fattree3
+from repro.sim import SimTables
+from repro.sim.workloads import (
+    Job,
+    WorkloadSimConfig,
+    all_to_all,
+    graph_scatter,
+    place_jobs,
+    ring_all_reduce,
+    run_jobs,
+    run_workload,
+    stencil,
+)
+
+
+def _job_mix(ranks: int, chunk_flits: int, n_jobs: int) -> list:
+    """Staggered-arrival tenant mix, sorted by arrival (FIFO order)."""
+    jobs = [
+        Job("ring", ring_all_reduce(ranks, chunk_flits), arrival=0),
+        Job("a2a", all_to_all(max(4, ranks // 2), chunk_flits),
+            arrival=24),
+    ]
+    if n_jobs >= 3:
+        jobs.append(Job("stencil", stencil((4, ranks // 4), chunk_flits,
+                                           iters=2), arrival=48))
+    if n_jobs >= 4:
+        jobs.append(Job("scatter", graph_scatter(ranks, chunk_flits,
+                                                 iters=2, seed=0),
+                        arrival=72))
+    return jobs
+
+
+def _p99(lat: np.ndarray) -> float:
+    return float(np.percentile(lat, 99)) if lat.size else float("nan")
+
+
+def run(fast: bool = True):
+    full = os.environ.get("REPRO_FULL", "0") == "1" or not fast
+    smoke = os.environ.get("REPRO_SMOKE", "0") == "1" and not full
+
+    if full:
+        q, ranks, chunk_flits, n_jobs, chunk = 7, 48, 16, 4, 256
+        policies = ("pack", "spread", "rack-aware")
+    elif smoke:
+        q, ranks, chunk_flits, n_jobs, chunk = 5, 12, 4, 2, 64
+        policies = ("pack", "spread")
+    else:
+        q, ranks, chunk_flits, n_jobs, chunk = 5, 16, 8, 3, 128
+        policies = ("pack", "spread", "rack-aware")
+
+    fabrics = [
+        ("sf", SimTables.build(build_slimfly(q)), "min"),
+        ("df", SimTables.build(build_dragonfly(h=3 if full else 2)),
+         "ugal_l"),
+        ("ft3", SimTables.build(build_fattree3(p=6 if full else 4),
+                                ecmp=True), "ecmp"),
+    ]
+    jobs = _job_mix(ranks, chunk_flits, n_jobs)
+
+    rows = []
+    for tag, tables, mode in fabrics:
+        assert tables.n_endpoints >= sum(j.n_ranks for j in jobs), \
+            (tag, tables.n_endpoints)
+        cfg = WorkloadSimConfig(mode=mode, chunk=chunk)
+        for policy in policies:
+            placements = place_jobs(tables, jobs, policy)
+            shared = run_jobs(tables, jobs, cfg, policy=policy,
+                              queue="fifo", placements=placements)
+
+            slowdowns = []
+            for j, job in enumerate(jobs):
+                # isolated baseline: the same job, alone, on the exact
+                # endpoints it got in the shared run
+                alone = run_workload(tables, job.workload, cfg,
+                                     ep_of_rank=placements[j])
+                jr = shared.job(job.name)
+                lat_shared = jr.latencies()
+                lat_alone = (alone.msg_done[alone.msg_done >= 0]
+                             - alone.msg_start[alone.msg_done >= 0]
+                             ).astype(np.float64)
+                jct_alone = alone.makespan
+                slow = (jr.jct / jct_alone if jct_alone > 0
+                        else float("inf"))
+                slowdowns.append(slow)
+                rows.append(dict(
+                    name=f"multitenant/{tag}/{policy}/{job.name}",
+                    derived=jr.jct,
+                    jct_alone=jct_alone,
+                    slowdown=round(slow, 3),
+                    p99_inflation=round(_p99(lat_shared)
+                                        / max(_p99(lat_alone), 1e-9), 3),
+                    queue_delay=jr.queue_delay,
+                    completed=jr.completed and alone.completed))
+            rows.append(dict(
+                name=f"multitenant/{tag}/{policy}/collective",
+                derived=round(float(np.mean(slowdowns)), 3),
+                makespan=shared.makespan,
+                completed=shared.completed))
+    return rows
+
+
+def _append_bench_entry(out_path: str) -> None:
+    """Time the steady-state SF q=5 multi-job chunk loop and append a
+    ``multitenant/q5`` entry to the BENCH_engine.json trajectory."""
+    from repro.bench import bench_callable, load_bench
+
+    tables = SimTables.build(build_slimfly(5))
+    jobs = _job_mix(16, 8, 3)
+    cfg = WorkloadSimConfig(mode="min", chunk=128)
+    placements = place_jobs(tables, jobs, "pack")
+
+    res = {}
+
+    def fn():
+        res["r"] = run_jobs(tables, jobs, cfg, policy="pack",
+                            placements=placements)
+
+    fn()                                  # compile outside the probe
+    cycles = res["r"].cycles_run
+    entry = bench_callable("multitenant/q5", fn, repeats=3,
+                           cycles=cycles, measure_memory="rss",
+                           meta=dict(jobs=len(jobs), policy="pack",
+                                     mode=cfg.mode,
+                                     makespan=res["r"].makespan,
+                                     completed=res["r"].completed))
+
+    import json
+    try:
+        doc = load_bench(out_path)
+    except FileNotFoundError:
+        doc = {"schema": 1, "suite": "engine_scaling", "backend": "cpu",
+               "meta": {}, "entries": {}}
+    doc["entries"][entry.name] = entry.to_json()
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# appended multitenant/q5 to {out_path}: "
+          f"wall_s={entry.wall_s:.3f} cycles={cycles}")
+
+
+def main() -> None:
+    from repro.bench import enable_compilation_cache
+    enable_compilation_cache()
+    for row in run(fast=True):
+        extras = {k: v for k, v in row.items()
+                  if k not in ("name", "derived")}
+        suffix = ";".join(f"{k}={v}" for k, v in extras.items())
+        print(f"{row['name']},{row['derived']}"
+              + (f" [{suffix}]" if suffix else ""))
+    # only a direct invocation may touch the committed baseline, same
+    # rule as benchmarks/engine_scaling.py
+    out = os.environ.get("REPRO_BENCH_OUT", "BENCH_engine.json")
+    _append_bench_entry(out)
+
+
+if __name__ == "__main__":
+    main()

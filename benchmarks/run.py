@@ -17,6 +17,7 @@ MODULES = [
     "faults_sweep",
     "fig6_perf",
     "workloads_jct",
+    "multitenant",
     "fig8_buffers",
     "engine_scaling",
     "table4_cost",

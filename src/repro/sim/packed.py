@@ -21,7 +21,13 @@ Field budget (asserted, not assumed):
     ``min(hops, V-1)`` (hop-indexed VC assignment), so saturation is
     observationally equivalent to the seed's unbounded counter;
   - msg ids (closed-loop DAG messages) need M < 2**24 (~16.7M — the
-    largest workload in the repo is a few thousand messages);
+    largest workload in the repo is a few thousand messages).  The
+    multi-job engine (repro.sim.workloads.jobs) splits the same 24-bit
+    budget into ``job << MSG_JOB_SHIFT | local_msg``: 6 job bits
+    (MAX_JOBS = 64 concurrent jobs) over 18 local-message bits
+    (MAX_JOB_MSGS = 262144 messages per job).  Job 0 with local ids is
+    numerically identical to the unsplit field, so single-job runs
+    produce bit-identical records;
   - inject_cycle keeps a full int32 word: closed-loop runs go to
     max_cycles = 200k and latency sums must not wrap (the int16-ish
     packing an earlier draft used would wrap at cycle 32768).
@@ -39,8 +45,10 @@ import jax.numpy as jnp
 
 __all__ = [
     "PK", "HOPS_MAX", "MAX_ROUTERS", "MAX_MSGS",
+    "MSG_JOB_SHIFT", "MAX_JOBS", "MAX_JOB_MSGS",
     "pack_record", "unpack_record", "bump_hops_word",
     "pk_dst", "pk_inter", "pk_time", "pk_hops", "pk_phase", "pk_msg",
+    "pk_job", "pk_job_mid",
 ]
 
 PK = 3                      # int32 words per packed record
@@ -48,8 +56,16 @@ HOPS_MAX = 63               # saturating hop counter (6 bits)
 MAX_ROUTERS = 1 << 15       # router ids must fit 15 bits
 MAX_MSGS = 1 << 24          # closed-loop msg ids must fit 24 bits
 
+# multi-job split of the 24-bit MSG field: job id in the high 6 bits,
+# per-job local message id in the low 18 (job 0 == unsplit field, so
+# the single-job engine's records are unchanged bit-for-bit)
+MSG_JOB_SHIFT = 18
+MAX_JOBS = 1 << (24 - MSG_JOB_SHIFT)        # 64 concurrent jobs
+MAX_JOB_MSGS = 1 << MSG_JOB_SHIFT           # 262144 messages per job
+
 _HOPS_MASK = jnp.int32(HOPS_MAX)
 _ID_MASK = jnp.int32(0xFFFF)
+_JOB_MID_MASK = jnp.int32(MAX_JOB_MSGS - 1)
 
 
 def pack_record(dst, inter, time, hops, phase, msg=None):
@@ -90,6 +106,16 @@ def pk_phase(pkt):
 
 def pk_msg(pkt):
     return pkt[..., 2] >> 7
+
+
+def pk_job(pkt):
+    """Job id bits of the MSG field (0 for single-job records)."""
+    return pk_msg(pkt) >> MSG_JOB_SHIFT
+
+
+def pk_job_mid(pkt):
+    """Per-job local message id bits of the MSG field."""
+    return pk_msg(pkt) & _JOB_MID_MASK
 
 
 def bump_hops_word(w2, set_phase):

@@ -204,6 +204,11 @@ def sweep_run_workload(tables: TablesLanes, wl, cfg=None,
     cfg.max_cycles); per-lane makespans and message stats are
     bit-identical to sequential `run_workload` calls.  Returns
     [WorkloadResult] * L.
+
+    Lanes vary data only: the sweep runs the single-job (J=1,
+    admitted-at-cycle-0) degenerate of the multi-job engine — the job
+    mix and placement shape the traced step and must stay
+    lane-invariant (DESIGN.md §10/§11).
     """
     # local import: workloads imports the engine (avoid a cycle)
     from .workloads import closed_loop

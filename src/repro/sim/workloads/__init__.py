@@ -5,11 +5,23 @@
 - mapping:     logical rank -> endpoint placement schemes
 - closed_loop: dependency-triggered flit injection on the shared
                SwitchCore; chunked lax.scan with early exit
+- jobs:        multi-tenant Job layer: arrival cycles, pack/spread/
+               rack-aware placement, FIFO/backfill admission queue,
+               one closed-loop run over the concatenated job mix
 - report:      makespan / per-phase latency / bandwidth + FabricModel
                cross-validation
 """
 
 from .closed_loop import WorkloadResult, WorkloadSimConfig, run_workload
+from .jobs import (
+    JOB_PLACEMENTS,
+    QUEUE_POLICIES,
+    Job,
+    JobResult,
+    MultiJobResult,
+    place_jobs,
+    run_jobs,
+)
 from .ir import (
     Workload,
     all_to_all,
@@ -40,6 +52,13 @@ __all__ = [
     "WorkloadSimConfig",
     "WorkloadResult",
     "run_workload",
+    "Job",
+    "JobResult",
+    "MultiJobResult",
+    "JOB_PLACEMENTS",
+    "QUEUE_POLICIES",
+    "place_jobs",
+    "run_jobs",
     "WorkloadReport",
     "summarize",
     "cycle_fabric_model",

@@ -1,7 +1,7 @@
-"""Closed-loop dependency-triggered workload engine (DESIGN.md §7).
+"""Closed-loop dependency-triggered workload engine (DESIGN.md §7, §11).
 
-Runs a :class:`~repro.sim.workloads.ir.Workload` message-DAG to
-completion on the cycle-level flit simulator and measures job
+Runs one or more :class:`~repro.sim.workloads.ir.Workload` message-DAGs
+to completion on the cycle-level flit simulator and measures job
 completion time — the quantity the open-loop Bernoulli engine
 (`repro.sim.engine.simulate`) structurally cannot produce.
 
@@ -21,12 +21,24 @@ simulator; only injection and the ejection fold differ:
     all-done check between chunks: one trace/compile per (tables,
     workload, placement, config) signature regardless of makespan, and
     early exit at chunk granularity.
+
+Multi-job generalisation (DESIGN.md §11): the compiled step works on a
+CONCATENATED message space over J jobs (`_MsgSpace`).  Message ids are
+global; the packed MSG field carries ``job << MSG_JOB_SHIFT | local``
+so the ejection fold can recover the global id with one [J+1]-offset
+gather.  Sendability is additionally gated on a per-job admit-cycle
+vector carried in the scan state (set host-side by the admission
+scheduler in `repro.sim.workloads.jobs`), and per-cycle stats report
+per-job done-message counts.  A single job admitted at cycle 0 makes
+every added term the identity, so `run_workload` results are
+bit-identical to the pre-job-layer engine (golden-pinned in
+tests/test_jobs.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +46,8 @@ import numpy as np
 
 from ..engine import (BIG, SimConfig, SwitchCore, _cache_put,
                       tables_signature)
-from ..packed import MAX_MSGS, pack_record, pk_msg
+from ..packed import (MAX_JOB_MSGS, MAX_JOBS, MSG_JOB_SHIFT, pack_record,
+                      pk_msg)
 from ..tables import SimTables
 from .ir import Workload
 from .mapping import place_ranks
@@ -92,10 +105,19 @@ class WorkloadResult:
 
     @property
     def achieved_bw(self) -> float:
-        """Delivered flits per cycle over the makespan (fabric-level)."""
-        if not np.isfinite(self.makespan) or self.makespan <= 0:
+        """Delivered flits per cycle, fabric-level.
+
+        Completed runs average over the makespan; incomplete (timed
+        out) runs average over the cycles actually run — a degraded
+        fabric that still moves flits must not plot as zero bandwidth
+        just because the DAG missed the max_cycles deadline
+        (`benchmarks/faults_sweep.py` relies on this).
+        """
+        span = (self.makespan if np.isfinite(self.makespan)
+                else float(self.cycles_run))
+        if span <= 0:
             return 0.0
-        return float(self.flits_delivered / self.makespan)
+        return float(self.flits_delivered / span)
 
     @property
     def avg_msg_latency(self) -> float:
@@ -106,7 +128,60 @@ class WorkloadResult:
         return float((self.msg_done[ok] - self.msg_start[ok]).mean())
 
 
-# (tables, workload, placement-bytes, static-config) -> compiled chunk
+# ---------------------------------------------------------------------------
+# concatenated multi-job message space
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _MsgSpace:
+    """Host-side concatenation of J workload DAGs into one message
+    space (global message ids; per-job offsets recover job-local ids).
+
+    ``fid`` is the value injected into the packed MSG field:
+    ``job << MSG_JOB_SHIFT | local_id``.  For J=1 it equals the global
+    id, so single-job packet records are unchanged bit-for-bit.
+    """
+    n_jobs: int
+    n_messages: int                   # Mtot over all jobs
+    job_off: np.ndarray               # [J+1] cumulative message offsets
+    src_ep: np.ndarray                # [Mtot]
+    dst_ep: np.ndarray                # [Mtot]
+    size: np.ndarray                  # [Mtot]
+    dep: np.ndarray                   # [Mtot, Dmax] global ids, -1 pad
+    fid: np.ndarray                   # [Mtot] packed MSG-field values
+
+
+def _build_space(wls: Sequence[Workload],
+                 eps: Sequence[np.ndarray]) -> _MsgSpace:
+    assert len(wls) == len(eps) and len(wls) >= 1
+    assert len(wls) <= MAX_JOBS, \
+        f"{len(wls)} jobs overflow the {MAX_JOBS}-job MSG field budget"
+    off = np.zeros(len(wls) + 1, dtype=np.int64)
+    src_l, dst_l, size_l, dep_l, fid_l = [], [], [], [], []
+    dmax = max(max(1, w.dep_matrix().shape[1]) for w in wls)
+    for j, (wl, ep) in enumerate(zip(wls, eps)):
+        m = wl.n_messages
+        assert m < MAX_JOB_MSGS, \
+            f"job {j}: {m} messages overflow the per-job id budget"
+        off[j + 1] = off[j] + m
+        src_l.append(ep[wl.src])
+        dst_l.append(ep[wl.dst])
+        size_l.append(wl.size.astype(np.int32))
+        dm = np.full((m, dmax), -1, dtype=np.int32)
+        d = wl.dep_matrix()
+        dm[:, :d.shape[1]] = np.where(d >= 0, d + off[j], -1)
+        dep_l.append(dm)
+        fid_l.append((j << MSG_JOB_SHIFT) + np.arange(m, dtype=np.int32))
+    return _MsgSpace(
+        n_jobs=len(wls), n_messages=int(off[-1]), job_off=off,
+        src_ep=np.concatenate(src_l).astype(np.int32),
+        dst_ep=np.concatenate(dst_l).astype(np.int32),
+        size=np.concatenate(size_l),
+        dep=np.concatenate(dep_l, axis=0),
+        fid=np.concatenate(fid_l))
+
+
+# (tables, workloads, placement-bytes, static-config) -> compiled chunk
 # runner.  The single-lane runner keeps the tables as closure constants
 # (gather specialisation, see repro.sim.engine) and so recompiles per
 # failure mask; the lane-batched sweep below lifts them into operands
@@ -116,39 +191,54 @@ class WorkloadResult:
 _RUNNER_CACHE: dict = {}
 
 
-def _chunk_runner(tables: SimTables, wl: Workload, ep_of_rank: np.ndarray,
-                  cfg: WorkloadSimConfig):
-    key = (id(tables), id(wl), ep_of_rank.tobytes(), cfg.static_key())
+def _space_runner(tables: SimTables, wls: Tuple[Workload, ...],
+                  eps: Tuple[np.ndarray, ...], cfg: WorkloadSimConfig):
+    """Compiled chunk runner over the concatenated message space of
+    `wls` placed at `eps`.  Returns (jitted_runner, init_carry,
+    (run_chunk_const, run_chunk_ops), space)."""
+    key = (id(tables), tuple(id(w) for w in wls),
+           tuple(e.tobytes() for e in eps), cfg.static_key())
     hit = _RUNNER_CACHE.get(key)
-    if hit is not None and hit[0] is tables and hit[1] is wl:
+    if hit is not None and hit[0] is tables and hit[1] == tuple(wls):
         return hit[2]
 
+    space = _build_space(wls, eps)
     core = SwitchCore(tables, cfg.to_sim_config())
     n_ep, Qs, eids = core.n_ep, core.Qs, core.eids
-    M = wl.n_messages
-    assert M < MAX_MSGS, f"msg ids overflow packed records: {M}"
+    M, J = space.n_messages, space.n_jobs
 
-    src_ep = ep_of_rank[wl.src]
-    dst_ep = ep_of_rank[wl.dst]
-    size = jnp.asarray(wl.size.astype(np.int32))
-    dep = jnp.asarray(wl.dep_matrix())                      # [M, Dmax]
+    size = jnp.asarray(space.size)
+    dep = jnp.asarray(space.dep)                            # [M, Dmax]
+    fid = jnp.asarray(space.fid)                            # [M]
+    job_off = jnp.asarray(space.job_off.astype(np.int32))   # [J+1]
     dst_r_of_msg = jnp.asarray(
-        tables.ep_router[dst_ep].astype(np.int32))          # [M]
+        tables.ep_router[space.dst_ep].astype(np.int32))    # [M]
+    job_of_msg = jnp.asarray(np.repeat(
+        np.arange(J, dtype=np.int32), np.diff(space.job_off)))  # [M]
+    mid_mask = jnp.int32(MAX_JOB_MSGS - 1)
 
-    # per-endpoint message lists (ascending id = topological order)
-    per_ep = [np.nonzero(src_ep == e)[0] for e in range(n_ep)]
+    # per-endpoint message lists (ascending GLOBAL id: topological
+    # within each job, earlier-arriving job first across jobs)
+    per_ep = [np.nonzero(space.src_ep == e)[0] for e in range(n_ep)]
     kmax = max(1, max((len(v) for v in per_ep), default=1))
     mbe = np.full((n_ep, kmax), -1, dtype=np.int32)
     for e, v in enumerate(per_ep):
         mbe[e, :len(v)] = v
     msgs_by_ep = jnp.asarray(mbe)
 
+    def to_gid(field):
+        # MSG field -> global message id; job ids of live packets are
+        # always < J, min() only guards garbage in zero-initialised
+        # queue slots (those are g=False and dropped anyway)
+        j = jnp.minimum(field >> MSG_JOB_SHIFT, J - 1)
+        return job_off[j] + (field & mid_mask)
+
     def fold(acc, g_net, g_src, pkt_net, pkt_src, cycle):
         # per-message flit accounting; message latency comes from the
         # carried start/done cycles, not a per-flit sum
         flits_del, delivered = acc
-        mn = jnp.where(g_net, pk_msg(pkt_net), M)           # M = OOB drop
-        ms = jnp.where(g_src, pk_msg(pkt_src), M)
+        mn = jnp.where(g_net, to_gid(pk_msg(pkt_net)), M)    # M = OOB drop
+        ms = jnp.where(g_src, to_gid(pk_msg(pkt_src)), M)
         flits_del = flits_del.at[mn.reshape(-1)].add(1, mode="drop")
         flits_del = flits_del.at[ms].add(1, mode="drop")
         delivered = (delivered + g_net.sum().astype(jnp.int32)
@@ -161,17 +251,19 @@ def _chunk_runner(tables: SimTables, wl: Workload, ep_of_rank: np.ndarray,
         return lambda carry, cycle: step(c, carry, cycle)
 
     def step(c, carry, cycle):
-        (nq_pkt, nq_count, sq_pkt, sq_count,
+        (nq_pkt, nq_count, sq_pkt, sq_count, admit,
          sent, flits_del, start_c, done_c, key) = carry
         key, k_rt = jax.random.split(key)
 
         occ = c.occupancy(nq_count)
 
-        # ---- ready set over the DAG (dense mask, carried counters)
+        # ---- ready set over the DAGs (dense mask, carried counters);
+        # a message is sendable only once its job has been admitted
         done = flits_del >= size                            # [M]
         dep_ok = jnp.where(dep >= 0, done[jnp.maximum(dep, 0)],
                            True).all(axis=1)
-        sendable = dep_ok & (sent < size)                   # [M]
+        admitted = (cycle >= admit)[job_of_msg]             # [M]
+        sendable = dep_ok & (sent < size) & admitted        # [M]
 
         # ---- per-endpoint pick: lowest-id sendable message
         cand = (msgs_by_ep >= 0) & sendable[jnp.maximum(msgs_by_ep, 0)]
@@ -185,7 +277,7 @@ def _chunk_runner(tables: SimTables, wl: Workload, ep_of_rank: np.ndarray,
         inter, phase = c.route_decision(dst_r, occ, k_rt)
         new_pkt = pack_record(dst_r, inter, cycle,
                               jnp.zeros((n_ep,), jnp.int32), phase,
-                              msg=mpick)
+                              msg=fid[mpick])
         sq_pkt, sq_count = c.inject(sq_pkt, sq_count, want, new_pkt)
         msel = jnp.where(want, mpick, M)                    # M = OOB drop
         sent = sent.at[msel].add(1, mode="drop")
@@ -199,9 +291,14 @@ def _chunk_runner(tables: SimTables, wl: Workload, ep_of_rank: np.ndarray,
 
         now_done = flits_del >= size
         done_c = jnp.where(now_done & (done_c == BIG), cycle + 1, done_c)
-        stats = (want.sum().astype(jnp.int32), delivered,
-                 now_done.sum().astype(jnp.int32))
-        return (nq_pkt, nq_count, sq_pkt, sq_count,
+        # per-job done-message counts without a scatter: job segments
+        # are contiguous, so a cumsum difference at the offsets does it
+        ncs = jnp.concatenate([
+            jnp.zeros((1,), jnp.int32),
+            jnp.cumsum(now_done.astype(jnp.int32))])
+        n_done_job = ncs[job_off[1:]] - ncs[job_off[:-1]]   # [J]
+        stats = (want.sum().astype(jnp.int32), delivered, n_done_job)
+        return (nq_pkt, nq_count, sq_pkt, sq_count, admit,
                 sent, flits_del, start_c, done_c, key), stats
 
     def run_chunk_const(carry, offset):
@@ -213,8 +310,11 @@ def _chunk_runner(tables: SimTables, wl: Workload, ep_of_rank: np.ndarray,
         cycles = offset + jnp.arange(cfg.chunk, dtype=jnp.int32)
         return jax.lax.scan(make_step(c), carry, cycles)
 
-    def init_carry(key0):
+    def init_carry(key0, admit0=None):
+        if admit0 is None:
+            admit0 = jnp.zeros((J,), jnp.int32)             # all at cycle 0
         return core.init_queues() + (
+            jnp.asarray(admit0, jnp.int32),                 # admit cycles
             jnp.zeros((M,), jnp.int32),                     # sent
             jnp.zeros((M,), jnp.int32),                     # flits_delivered
             jnp.full((M,), BIG, jnp.int32),                 # start cycle
@@ -226,9 +326,17 @@ def _chunk_runner(tables: SimTables, wl: Workload, ep_of_rank: np.ndarray,
     # across the whole chunked run (DESIGN.md §10).  run_chunk_ops is
     # the operand-tables variant the mask-varying lane sweep vmaps.
     fn = (jax.jit(run_chunk_const, donate_argnums=(0,)), init_carry,
-          (run_chunk_const, run_chunk_ops))
-    _cache_put(_RUNNER_CACHE, key, (tables, wl, fn))
+          (run_chunk_const, run_chunk_ops), space)
+    _cache_put(_RUNNER_CACHE, key, (tables, tuple(wls), fn))
     return fn
+
+
+def _chunk_runner(tables: SimTables, wl: Workload, ep_of_rank: np.ndarray,
+                  cfg: WorkloadSimConfig):
+    """Single-workload runner: the J=1 degenerate of `_space_runner`."""
+    run, init_carry, variants, _ = _space_runner(
+        tables, (wl,), (np.asarray(ep_of_rank, np.int32),), cfg)
+    return run, init_carry, variants
 
 
 def _workload_result(wl: Workload, cfg: WorkloadSimConfig,
@@ -243,6 +351,12 @@ def _workload_result(wl: Workload, cfg: WorkloadSimConfig,
     msg_start = np.where(start_c < big, start_c, -1)
     msg_done = np.where(done_c < big, done_c, -1)
     makespan = float(done_c.max()) if completed else float("inf")
+    if completed:
+        # the chunked host loop runs past completion to the chunk
+        # boundary; trim the accounting to the true makespan (the
+        # trailing cycles are post-completion and deliver nothing)
+        cycles_run = int(done_c.max())
+        per_cycle_dlv = per_cycle_dlv[:cycles_run]
 
     return WorkloadResult(
         name=wl.name, mode=cfg.mode, placement=cfg.placement,
@@ -277,11 +391,11 @@ def run_workload(tables: SimTables, wl: Workload,
         carry, (inj, dlv, n_done) = run_chunk(carry, jnp.int32(t))
         per_cycle_dlv.append(np.asarray(dlv, dtype=np.int64))
         t += cfg.chunk
-        if int(n_done[-1]) == M:
+        if int(n_done[-1, 0]) == M:
             completed = True
             break
 
-    (_, _, _, _, sent, flits_del, start_c, done_c, _) = carry
+    (_, _, _, _, _, sent, flits_del, start_c, done_c, _) = carry
     return _workload_result(wl, cfg, ep_of_rank,
                             (sent, flits_del, start_c, done_c),
                             np.concatenate(per_cycle_dlv), completed, t)
@@ -299,6 +413,10 @@ def _sweep_run_workload(tables: SimTables, wl: Workload,
     finished lane idles inertly: nothing sendable, queues drained,
     done/start counters guarded against rewrite).  Per-lane results
     are bit-identical to sequential `run_workload` calls.
+
+    Lanes vary DATA only (DESIGN.md §10): the job mix and placement
+    are part of the traced step, so the sweep runs the single-job
+    (J=1, admitted-at-0) degenerate of the multi-job engine.
     """
     from ..sweep import _lane_count
 
@@ -373,11 +491,11 @@ def _sweep_run_workload(tables: SimTables, wl: Workload,
             carry, (inj, dlv, n_done) = fn(carry, jnp.int32(t))
         per_cycle_dlv.append(np.asarray(dlv, dtype=np.int64))   # [L, chunk]
         t += cfg.chunk
-        done_lane = np.asarray(n_done)[:, -1] == M
+        done_lane = np.asarray(n_done)[:, -1, 0] == M
         if done_lane.all():
             break
 
-    (_, _, _, _, sent, flits_del, start_c, done_c, _) = carry
+    (_, _, _, _, _, sent, flits_del, start_c, done_c, _) = carry
     dlv_all = np.concatenate(per_cycle_dlv, axis=1)             # [L, t]
     out = []
     for i in range(L):

@@ -12,6 +12,12 @@ endpoint `e` lives on router `ep_router[e]` and rack
   - random:  seeded permutation — the fragmented-cluster worst case
   - spread:  round-robin across endpoint routers — maximum injection
              parallelism, minimum locality
+
+With ``n_ranks == n_endpoints`` every scheme returns a total order
+(permutation) of the fabric's endpoints; the multi-tenant job layer
+(`repro.sim.workloads.jobs.place_jobs`) slices those orders into
+per-job placements (pack -> linear, spread -> spread, rack-aware ->
+blocked).
 """
 
 from __future__ import annotations

@@ -61,7 +61,10 @@ class WorkloadReport:
             f"flits={int(r.msg_size.sum())}",
             f"makespan   {r.makespan:.0f} cycles"
             + ("" if r.completed else "  (INCOMPLETE)"),
-            f"achieved   {self.achieved_bw_flits_per_cycle:.2f} flits/cycle",
+            f"achieved   {self.achieved_bw_flits_per_cycle:.2f} flits/cycle"
+            + ("" if r.completed else
+               f"  (delivered/cycles_run over {r.cycles_run} cycles; "
+               f"run did not complete)"),
             f"{'phase':16s} {'msgs':>6s} {'mean':>8s} {'p50':>8s} "
             f"{'p99':>8s}",
         ]
@@ -76,13 +79,26 @@ def summarize(wl: Workload, result: WorkloadResult,
               n_bins: int = 16) -> WorkloadReport:
     lat = (result.msg_done - result.msg_start).astype(np.float64)
     ok = result.msg_done >= 0
+    # every phase is histogrammed over ONE shared set of edges spanning
+    # all completed messages of the run, so per-phase counts are
+    # directly comparable bin-for-bin (per-phase auto ranges made
+    # cross-phase comparison meaningless and degenerated when a phase's
+    # latencies were all equal)
+    all_vals = lat[ok]
+    if all_vals.size:
+        lo, hi = float(all_vals.min()), float(all_vals.max())
+        if lo == hi:                   # constant-latency guard
+            lo, hi = lo - 0.5, hi + 0.5
+        edges = np.linspace(lo, hi, n_bins + 1)
+    else:
+        edges = np.linspace(0.0, 1.0, n_bins + 1)
     phases = []
     for pid, pname in enumerate(wl.phase_names):
         sel = (result.msg_phase == pid)
         got = sel & ok
         vals = lat[got]
         if vals.size:
-            counts, edges = np.histogram(vals, bins=n_bins)
+            counts, _ = np.histogram(vals, bins=edges)
             stats = PhaseStats(
                 pname, int(sel.sum()), int(got.sum()),
                 float(vals.mean()), float(np.percentile(vals, 50)),
@@ -90,8 +106,7 @@ def summarize(wl: Workload, result: WorkloadResult,
         else:
             stats = PhaseStats(pname, int(sel.sum()), 0, float("nan"),
                                float("nan"), float("nan"),
-                               np.zeros(n_bins, np.int64),
-                               np.linspace(0, 1, n_bins + 1))
+                               np.zeros(n_bins, np.int64), edges)
         phases.append(stats)
     per_rank = np.zeros(wl.n_ranks, dtype=np.int64)
     np.add.at(per_rank, wl.src, result.msg_sent)

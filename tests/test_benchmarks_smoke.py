@@ -40,6 +40,29 @@ def test_benchmark_fast_mode(modname, monkeypatch, tmp_path):
         ratios = [row["fabric_ratio"] for row in rows
                   if "fabric_ratio" in row]
         assert ratios and all(0.2 < r < 5.0 for r in ratios), ratios
+    if modname == "multitenant":
+        # multi-tenant interference rows: every fabric under pack AND
+        # spread, per-job JCT rows with slowdown/p99-inflation vs the
+        # isolated baseline, plus a collective-slowdown row per point
+        names = " ".join(row["name"] for row in rows)
+        for tag in ("/sf/", "/df/", "/ft3/"):
+            assert tag in names, names
+        for pol in ("/pack/", "/spread/"):
+            assert pol in names, names
+        assert all(row["completed"] for row in rows), rows
+        per_job = [r for r in rows
+                   if not r["name"].endswith("/collective")]
+        coll = [r for r in rows if r["name"].endswith("/collective")]
+        assert per_job and coll
+        for row in per_job:
+            assert row["derived"] > 0, row          # JCT cycles
+            assert row["slowdown"] > 0.2, row
+            assert math.isfinite(row["p99_inflation"]), row
+            assert row["queue_delay"] >= 0, row
+        for row in coll:
+            # collective slowdown: mean per-job JCT inflation; >= ~1
+            # up to small RNG-phase wobble, bounded by sanity above
+            assert 0.5 < row["derived"] < 100.0, row
     if modname == "fig8_buffers":
         # both halves of the figure must be present and sane, at the
         # smoke sweep sizes (REPRO_SMOKE knob threaded through, like

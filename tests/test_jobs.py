@@ -1,0 +1,234 @@
+"""Multi-tenant job layer (DESIGN.md §11): the 1-job arrival-0 path of
+the generalized engine is bit-exact vs `run_workload` (golden-pinned),
+arrival cycles gate injection exactly, the admission queue serializes
+endpoint conflicts (FIFO head-of-line vs backfill), and `place_jobs`
+carves disjoint per-job placements out of the policy orders."""
+
+import numpy as np
+import pytest
+
+from repro.core import build_slimfly
+from repro.core.layout import make_layout
+from repro.sim import SimTables
+from repro.sim.workloads import (
+    JOB_PLACEMENTS,
+    Job,
+    WorkloadSimConfig,
+    all_to_all,
+    place_jobs,
+    ring_all_reduce,
+    run_jobs,
+    run_workload,
+    stencil,
+)
+
+
+@pytest.fixture(scope="module")
+def sf5_tables():
+    return SimTables.build(build_slimfly(5))
+
+
+# ---------------------------------------------------------------------------
+# single-job degenerate: bit-exact vs run_workload, golden-pinned
+# ---------------------------------------------------------------------------
+
+# Golden outcomes of the single-job closed-loop path on SF q=5,
+# captured from the pre-job-layer engine (PR 5 tree).  The multi-job
+# refactor must keep a 1-job arrival-0 run bit-identical: same
+# makespan, same per-message start/done cycles, same delivered flits.
+# cycles_run pins the TRIMMED value (== makespan; the pre-fix engine
+# reported the chunk-rounded 256/192/100 here).  Caveat: route RNG
+# ties these values to the jax PRNG implementation — a jax upgrade may
+# legitimately shift them (re-pin if so, like test_engine_scaling's
+# golden).
+_GOLDEN = [
+    # (workload builder, cfg kwargs, makespan, flits, done_sum, start_sum)
+    (lambda: ring_all_reduce(16, 8),
+     dict(mode="min", placement="linear", chunk=128, seed=0),
+     250.0, 3840, 61845, 57855),
+    (lambda: ring_all_reduce(12, 5),
+     dict(mode="ugal_l", placement="spread", chunk=96, seed=3),
+     182.0, 1320, 24615, 22478),
+    (lambda: stencil((4, 4), 8, iters=2),
+     dict(mode="min", placement="blocked", chunk=100, seed=1),
+     98.0, 1024, 6646, 4332),
+]
+
+
+@pytest.mark.parametrize("case", range(len(_GOLDEN)))
+def test_golden_single_job_outcomes(sf5_tables, case):
+    wl_fn, kw, makespan, flits, done_sum, start_sum = _GOLDEN[case]
+    r = run_workload(sf5_tables, wl_fn(), WorkloadSimConfig(**kw))
+    assert r.completed
+    assert r.makespan == makespan
+    assert r.cycles_run == int(makespan)          # trimmed, not rounded
+    assert r.flits_delivered == flits
+    assert int(r.msg_done.sum()) == done_sum
+    assert int(r.msg_start.sum()) == start_sum
+
+
+def test_single_job_bitexact_vs_run_workload(sf5_tables):
+    """run_jobs with one arrival-0 job under `pack` must reproduce
+    run_workload under `linear` placement bit-for-bit (same compiled
+    step, admit gate all-true)."""
+    wl = ring_all_reduce(16, 8)
+    cfg = WorkloadSimConfig(mode="min", chunk=128, seed=0)
+    r = run_workload(sf5_tables, wl, cfg)
+    mj = run_jobs(sf5_tables, [Job("solo", wl, arrival=0)], cfg,
+                  policy="pack")
+    jr = mj.jobs[0]
+    assert mj.completed and jr.completed
+    assert mj.makespan == r.makespan
+    assert mj.cycles_run == r.cycles_run
+    assert mj.flits_delivered == r.flits_delivered
+    np.testing.assert_array_equal(jr.msg_start, r.msg_start)
+    np.testing.assert_array_equal(jr.msg_done, r.msg_done)
+    np.testing.assert_array_equal(jr.ep_of_rank, r.ep_of_rank)
+    np.testing.assert_array_equal(mj.per_cycle_delivered,
+                                  r.per_cycle_delivered)
+
+
+# ---------------------------------------------------------------------------
+# arrival gating and conservation
+# ---------------------------------------------------------------------------
+
+def test_arrival_gates_injection_exactly(sf5_tables):
+    """A lone job arriving at cycle a starts injecting exactly at a
+    (admitted at t=0 with admit=arrival, endpoints free) and its JCT
+    excludes the pre-arrival idle time."""
+    wl = ring_all_reduce(8, 4)
+    cfg = WorkloadSimConfig(mode="min", chunk=64, seed=0)
+    base = run_jobs(sf5_tables, [Job("j", wl, 0)], cfg, policy="pack")
+    late = run_jobs(sf5_tables, [Job("j", wl, 37)], cfg, policy="pack")
+    jb, jl = base.jobs[0], late.jobs[0]
+    assert jl.admit_cycle == 37 and jl.start >= 37
+    assert (jl.msg_start >= 37).all()
+    assert jl.queue_delay == 0
+    # same DAG alone on an idle fabric: service time matches the
+    # arrival-0 run up to route-RNG phase differences; the makespan
+    # accounting must shift with the arrival
+    assert late.makespan >= 37 + 1
+    assert jl.jct == jl.done - 37
+    assert abs(jl.jct - jb.jct) <= 0.25 * jb.jct
+
+
+def test_multijob_conservation(sf5_tables):
+    """Every job in a 3-tenant mix drains its DAG; fabric-level
+    delivered flits are the sum of the jobs' totals."""
+    jobs = [Job("ring", ring_all_reduce(12, 4), 0),
+            Job("a2a", all_to_all(8, 2), 40),
+            Job("st", stencil((4, 4), 4, iters=1), 80)]
+    mj = run_jobs(sf5_tables, jobs, WorkloadSimConfig(mode="min", chunk=64),
+                  policy="spread")
+    assert mj.completed
+    total = sum(j.workload.total_flits for j in jobs)
+    assert mj.flits_delivered == total
+    assert int(mj.per_cycle_delivered.sum()) == total
+    assert mj.cycles_run == int(mj.makespan)
+    for job, jr in zip(jobs, mj.jobs):
+        assert jr.completed
+        assert jr.flits_delivered == job.workload.total_flits
+        assert (jr.msg_done > jr.msg_start).all()
+        assert jr.start >= job.arrival
+
+
+# ---------------------------------------------------------------------------
+# admission queue
+# ---------------------------------------------------------------------------
+
+def test_admission_serializes_endpoint_conflict(sf5_tables):
+    """Two jobs pinned to the SAME endpoints run strictly one after the
+    other: the second admits at a chunk boundary at or after the first
+    completes, and starts no earlier than its admission."""
+    wl = ring_all_reduce(8, 4)
+    cfg = WorkloadSimConfig(mode="min", chunk=64, seed=0)
+    pl = place_jobs(sf5_tables, [Job("A", wl, 0)], "pack")[0]
+    mj = run_jobs(sf5_tables, [Job("A", wl, 0), Job("B", wl, 0)], cfg,
+                  placements=[pl, pl])
+    a, b = mj.jobs
+    assert mj.completed
+    assert b.admit_cycle >= a.done
+    assert b.admit_cycle % cfg.chunk == 0        # boundary granularity
+    assert b.start >= b.admit_cycle
+    assert (b.msg_start >= b.admit_cycle).all()
+    assert b.queue_delay > 0
+    assert mj.makespan == b.done
+
+
+def test_fifo_blocks_backfill_admits(sf5_tables):
+    """C's endpoints are free, but under FIFO it waits behind the
+    queued head-of-line job B; backfill admits C immediately."""
+    wl = ring_all_reduce(8, 4)
+    c_wl = all_to_all(6, 2)
+    cfg = WorkloadSimConfig(mode="min", chunk=64, seed=0)
+    pl = place_jobs(sf5_tables, [Job("A", wl, 0), Job("B", wl, 0),
+                                 Job("C", c_wl, 0)], "pack")
+    placements = [pl[0], pl[0], pl[2]]           # B conflicts with A
+    jobs = [Job("A", wl, 0), Job("B", wl, 0), Job("C", c_wl, 0)]
+    fifo = run_jobs(sf5_tables, jobs, cfg, placements=placements,
+                    queue="fifo")
+    back = run_jobs(sf5_tables, jobs, cfg, placements=placements,
+                    queue="backfill")
+    assert fifo.completed and back.completed
+    assert back.job("C").admit_cycle == 0        # arrival, not blocked
+    assert fifo.job("C").admit_cycle > 0         # head-of-line blocked
+    assert fifo.job("B").queue_delay > 0
+    assert back.job("B").queue_delay > 0
+
+
+def test_run_jobs_validates_inputs(sf5_tables):
+    wl = ring_all_reduce(8, 4)
+    with pytest.raises(ValueError, match="sorted by arrival"):
+        run_jobs(sf5_tables, [Job("A", wl, 10), Job("B", wl, 0)])
+    with pytest.raises(ValueError, match="unknown queue"):
+        run_jobs(sf5_tables, [Job("A", wl, 0)], queue="lifo")
+    with pytest.raises(ValueError, match="unknown job placement"):
+        place_jobs(sf5_tables, [Job("A", wl, 0)], "best-fit")
+
+
+# ---------------------------------------------------------------------------
+# placement policies
+# ---------------------------------------------------------------------------
+
+def test_place_jobs_disjoint_and_injective(sf5_tables):
+    jobs = [Job("a", ring_all_reduce(12, 4), 0),
+            Job("b", all_to_all(8, 2), 0),
+            Job("c", stencil((4, 4), 4, iters=1), 0)]
+    for policy in JOB_PLACEMENTS:
+        pls = place_jobs(sf5_tables, jobs, policy)
+        seen = set()
+        for job, eps in zip(jobs, pls):
+            assert len(eps) == job.n_ranks
+            assert len(np.unique(eps)) == len(eps)
+            assert eps.min() >= 0 and eps.max() < sf5_tables.n_endpoints
+            assert not (set(eps.tolist()) & seen), policy
+            seen |= set(eps.tolist())
+
+
+def test_place_jobs_pack_is_contiguous(sf5_tables):
+    jobs = [Job("a", ring_all_reduce(8, 4), 0),
+            Job("b", all_to_all(6, 2), 0)]
+    pls = place_jobs(sf5_tables, jobs, "pack")
+    np.testing.assert_array_equal(pls[0], np.arange(8))
+    np.testing.assert_array_equal(pls[1], np.arange(8, 8 + 6))
+
+
+def test_place_jobs_rack_aware_separates_racks(sf5_tables):
+    layout = make_layout(sf5_tables.topo)
+    jobs = [Job("a", ring_all_reduce(6, 4), 0),
+            Job("b", all_to_all(6, 2), 0)]
+    pls = place_jobs(sf5_tables, jobs, "rack-aware")
+    racks = [set(layout.rack_of[sf5_tables.ep_router[eps]].tolist())
+             for eps in pls]
+    assert not (racks[0] & racks[1]), racks
+
+
+def test_place_jobs_wraps_when_fabric_full(sf5_tables):
+    """Demand beyond the fabric wraps modulo n_endpoints: the wrapped
+    job overlaps the first (the admission queue then serialises it)."""
+    n_ep = sf5_tables.n_endpoints
+    k = (2 * n_ep) // 3
+    jobs = [Job("a", all_to_all(k, 1), 0), Job("b", all_to_all(k, 1), 0)]
+    pls = place_jobs(sf5_tables, jobs, "pack")
+    assert set(pls[0].tolist()) & set(pls[1].tolist())
+    assert len(np.unique(pls[1])) == k

@@ -4,10 +4,14 @@ conservation (every message delivered exactly once, finite makespan),
 determinism, and the FabricModel cross-validation the acceptance
 criterion pins at 2x."""
 
+import functools
+
 import numpy as np
 import pytest
 
+from _hypothesis_compat import given, settings, st
 from repro.core import build_slimfly
+from repro.core.layout import make_layout
 from repro.core.routing import build_routing, is_deadlock_free, valiant_path
 from repro.sim import SimTables
 from repro.sim.workloads import (
@@ -21,7 +25,9 @@ from repro.sim.workloads import (
     ring_all_reduce,
     run_workload,
     stencil,
+    summarize,
 )
+from repro.sim.workloads.closed_loop import WorkloadResult
 
 RING_K, RING_CHUNK = 16, 8
 
@@ -125,6 +131,54 @@ def test_placement_spread_distinct_routers(sf5_tables):
     assert len(set(sf5_tables.ep_router[eps])) == n_epr
 
 
+@functools.lru_cache(maxsize=None)
+def _prop_tables(q):
+    # q=7 (N=98 routers) is expensive to build; share across draws
+    return SimTables.build(build_slimfly(q))
+
+
+@settings(max_examples=20, deadline=None)
+@given(q=st.sampled_from([5, 7]), scheme=st.sampled_from(PLACEMENTS),
+       full=st.sampled_from([False, True]), seed=st.integers(0, 7))
+def test_placement_property_injective_convention(q, scheme, full, seed):
+    """Property (satellite): every scheme returns an injective map into
+    the p-endpoints-per-router numbering, for n_ranks both < and ==
+    n_endpoints; n_ranks == n_endpoints is a permutation of the fabric
+    (the total order the job layer slices)."""
+    tables = _prop_tables(q)
+    n_ep, p = tables.n_endpoints, tables.p
+    n_ranks = n_ep if full else 1 + (seed * 9173 + q) % (n_ep - 1)
+    eps = place_ranks(tables, n_ranks, scheme, seed=seed)
+    assert eps.shape == (n_ranks,) and eps.dtype == np.int32
+    assert len(np.unique(eps)) == n_ranks                 # injective
+    assert eps.min() >= 0 and eps.max() < n_ep
+    # endpoint numbering convention: endpoint e lives on router
+    # ep_router[e], p consecutive endpoint ids per router
+    routers = tables.ep_router[eps]
+    assert np.array_equal(routers, tables.ep_router[::p][eps // p])
+    if full:
+        assert np.array_equal(np.sort(eps), np.arange(n_ep))
+    if scheme == "blocked":
+        # rack-ordering against make_layout: rack ids are
+        # non-decreasing along rank order, and every complete p-block
+        # of consecutive ranks shares one router
+        racks = make_layout(tables.topo).rack_of[routers]
+        assert (np.diff(racks) >= 0).all()
+        nb = n_ranks // p
+        if nb:
+            blocks = routers[:nb * p].reshape(nb, p)
+            assert (blocks == blocks[:, :1]).all()
+
+
+def test_placement_random_is_seed_sensitive(sf5_tables):
+    """Premise of the `_sweep_run_workload` guard (tested end-to-end in
+    tests/test_sweep.py): `random` placement varies with the seed, so
+    per-lane seeds cannot share one compiled placement silently."""
+    a = place_ranks(sf5_tables, 32, "random", seed=0)
+    b = place_ranks(sf5_tables, 32, "random", seed=1)
+    assert not np.array_equal(a, b)
+
+
 # ---------------------------------------------------------------------------
 # deadlock freedom of the routes the engine uses (satellite)
 # ---------------------------------------------------------------------------
@@ -209,3 +263,98 @@ def test_ring_all_reduce_matches_fabric_model(sf5_tables, ring_run):
     cc = fabric_crosscheck(sf5_tables.topo, "all_reduce",
                            RING_K * RING_CHUNK, r.ep_of_rank, r.makespan)
     assert 0.5 <= cc["ratio"] <= 2.0, cc
+
+
+# ---------------------------------------------------------------------------
+# accounting regressions (PR 6 satellites)
+# ---------------------------------------------------------------------------
+
+def test_cycles_run_trimmed_to_makespan(ring_run):
+    """Regression: completed runs used to report cycles_run rounded up
+    to the chunk boundary, with up to chunk-1 trailing post-completion
+    entries in per_cycle_delivered.  Both must be trimmed to the true
+    makespan.  The fixture's makespan is deliberately NOT a multiple of
+    cfg.chunk, so the pre-fix rounding is observable."""
+    wl, cfg, r = ring_run
+    assert r.completed
+    assert int(r.makespan) % cfg.chunk != 0, \
+        "fixture no longer exercises the rounding path; pick a new chunk"
+    assert r.cycles_run == int(r.makespan)
+    assert len(r.per_cycle_delivered) == r.cycles_run
+    assert int(r.per_cycle_delivered.sum()) == wl.total_flits
+
+
+def test_incomplete_run_reports_partial_bw(sf5_tables):
+    """Regression: achieved_bw returned 0.0 whenever makespan was inf,
+    so timed-out degraded runs plotted as zero bandwidth.  Incomplete
+    runs must report delivered/cycles_run, and the report table must
+    mark the distinction."""
+    wl = ring_all_reduce(RING_K, RING_CHUNK)
+    cfg = WorkloadSimConfig(mode="min", chunk=32, max_cycles=32, seed=0)
+    r = run_workload(sf5_tables, wl, cfg)
+    assert not r.completed and not np.isfinite(r.makespan)
+    assert r.cycles_run == 32                    # no trimming: ran out
+    assert r.flits_delivered > 0
+    assert r.achieved_bw == pytest.approx(r.flits_delivered / 32)
+    table = summarize(wl, r).table()
+    assert "INCOMPLETE" in table
+    assert "run did not complete" in table
+
+
+def _fake_result(wl, msg_start, msg_done):
+    return WorkloadResult(
+        name=wl.name, mode="min", placement="linear", n_ranks=wl.n_ranks,
+        n_messages=wl.n_messages, completed=True,
+        makespan=float(msg_done.max()), cycles_run=int(msg_done.max()),
+        flits_injected=wl.total_flits, flits_delivered=wl.total_flits,
+        msg_size=wl.size, msg_phase=wl.phase,
+        msg_sent=wl.size.copy(), msg_delivered=wl.size.copy(),
+        msg_start=msg_start, msg_done=msg_done,
+        per_cycle_delivered=np.zeros(int(msg_done.max()), np.int64),
+        ep_of_rank=np.arange(wl.n_ranks, dtype=np.int32))
+
+
+def test_summarize_shared_hist_edges(ring_run):
+    """Regression: per-phase auto histogram ranges made hist_edges
+    differ across phases (cross-phase comparison meaningless); every
+    phase must share one set of edges spanning the whole run.
+
+    The synthetic result gives the two ring phases DISJOINT latency
+    ranges (phase 0 constant at 5, phase 1 spread over [2, 40]), so the
+    pre-fix per-phase auto ranges are observably different."""
+    wl = ring_all_reduce(4, 2)                   # 2 phases, 24 messages
+    m = wl.n_messages
+    start = np.arange(m, dtype=np.int64) + 1
+    lat = np.where(wl.phase == 0, 5,
+                   2 + (38 * np.arange(m)) // max(m - 1, 1))
+    r = _fake_result(wl, start, start + lat)
+    rep = summarize(wl, r)
+    assert len(rep.phases) == 2
+    edges0 = rep.phases[0].hist_edges
+    assert edges0[0] == pytest.approx(lat.min())
+    assert edges0[-1] == pytest.approx(lat.max())
+    for ph in rep.phases[1:]:
+        np.testing.assert_array_equal(ph.hist_edges, edges0)
+    for ph in rep.phases:
+        assert int(ph.hist_counts.sum()) == ph.n_completed
+
+    # end-to-end on a real run: still one shared set of edges
+    wl2, _, r2 = ring_run
+    rep2 = summarize(wl2, r2)
+    for ph in rep2.phases[1:]:
+        np.testing.assert_array_equal(ph.hist_edges,
+                                      rep2.phases[0].hist_edges)
+
+
+def test_summarize_constant_latency_guard():
+    """When EVERY completed latency is equal, the shared lo==hi range
+    must widen instead of collapsing to zero-width edges."""
+    wl = all_to_all(2, 4)                        # 2 messages, 4 flits
+    m = wl.n_messages
+    start = np.full(m, 5, dtype=np.int64)
+    r = _fake_result(wl, start, start + 7)
+    rep = summarize(wl, r)
+    for ph in rep.phases:
+        edges = ph.hist_edges
+        assert np.isfinite(edges).all() and edges[0] < edges[-1]
+        assert int(ph.hist_counts.sum()) == ph.n_completed
