@@ -1,11 +1,14 @@
 """Benchmark harness — one module per paper table/figure + the framework
 roofline.  Prints ``name,us_per_call,derived`` CSV (module wall time is
-amortised over its rows).
+amortised over its rows), then one machine-parseable ``# SUMMARY``
+JSON line with per-module wall time and status, so CI logs show where
+smoke time goes.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--only fig6]
 """
 
 import argparse
+import json
 import sys
 import time
 
@@ -23,6 +26,7 @@ MODULES = [
     "table4_cost",
     "topology_collectives",
     "roofline_bench",
+    "telemetry_export",
 ]
 
 
@@ -44,6 +48,7 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
+    summary = {}
     for modname in MODULES:
         if args.only and args.only not in modname:
             continue
@@ -55,8 +60,14 @@ def main() -> None:
             print(f"{modname}/ERROR,0,{type(e).__name__}:{e}",
                   file=sys.stdout)
             failures += 1
+            summary[modname] = {"wall_s": round(time.time() - t0, 3),
+                                "rows": 0, "status": "error",
+                                "error": f"{type(e).__name__}: {e}"}
             continue
-        dt_us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+        wall = time.time() - t0
+        summary[modname] = {"wall_s": round(wall, 3), "rows": len(rows),
+                            "status": "ok"}
+        dt_us = wall * 1e6 / max(len(rows), 1)
         for row in rows:
             extras = {k: v for k, v in row.items()
                       if k not in ("name", "derived")}
@@ -66,6 +77,12 @@ def main() -> None:
                 print(f"{row['name']},{dt_us:.0f},{derived} [{suffix}]")
             else:
                 print(f"{row['name']},{dt_us:.0f},{derived}")
+    # structured per-module wall-time/status trailer, greppable in CI
+    # logs: `grep '^# SUMMARY' | sed 's/^# SUMMARY //' | jq .`
+    print("# SUMMARY " + json.dumps(
+        {"total_wall_s": round(sum(m["wall_s"] for m in summary.values()),
+                               3),
+         "failures": failures, "modules": summary}, sort_keys=True))
     sys.exit(1 if failures else 0)
 
 

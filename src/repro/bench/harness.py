@@ -51,9 +51,51 @@ from typing import Callable, Optional
 
 __all__ = ["BenchEntry", "bench_callable", "peak_memory_bytes",
            "rss_hwm_bytes", "enable_compilation_cache",
-           "write_bench", "load_bench", "check_regression"]
+           "write_bench", "load_bench", "check_regression",
+           "repo_stamp", "lowering_breakdown"]
 
 SCHEMA_VERSION = 1
+
+_GIT_SHA_CACHE: list = []
+
+
+def repo_stamp(telemetry: bool = False) -> dict:
+    """Provenance stamp for a BENCH entry's meta: the git SHA of the
+    working tree, the jax version, and whether the benched path had
+    telemetry enabled — so BENCH_*.json trajectories stay attributable
+    across PRs and across telemetry-on/off configurations."""
+    import jax
+
+    if not _GIT_SHA_CACHE:
+        sha = "unknown"
+        try:
+            import subprocess
+            out = subprocess.run(
+                ["git", "rev-parse", "--short", "HEAD"],
+                cwd=os.path.dirname(os.path.abspath(__file__)),
+                capture_output=True, text=True, timeout=10)
+            if out.returncode == 0:
+                sha = out.stdout.strip()
+        except Exception:
+            pass
+        _GIT_SHA_CACHE.append(sha)
+    return {"git_sha": _GIT_SHA_CACHE[0], "jax_version": jax.__version__,
+            "telemetry": bool(telemetry)}
+
+
+def lowering_breakdown(fn, *args) -> dict:
+    """Split a jitted callable's pre-execution cost into tracing/
+    lowering vs XLA compilation, in seconds: ``{"trace_lower_s": ..,
+    "xla_compile_s": ..}``.  Telemetry changes the traced graph (extra
+    carry arrays, counter updates), so benchmarks report both phases
+    separately to show where a config's compile tax actually goes.
+    `fn` must be a jax.jit-wrapped callable (it needs `.lower`)."""
+    t0 = time.perf_counter()
+    lowered = fn.lower(*args)
+    t1 = time.perf_counter()
+    lowered.compile()
+    t2 = time.perf_counter()
+    return {"trace_lower_s": t1 - t0, "xla_compile_s": t2 - t1}
 
 
 def enable_compilation_cache() -> tuple:
@@ -213,7 +255,8 @@ def peak_memory_bytes(fn: Callable[[], object],
 def bench_callable(name: str, fn: Callable[[], object], *,
                    repeats: int = 3, cycles: Optional[int] = None,
                    measure_memory=True,
-                   meta: Optional[dict] = None) -> BenchEntry:
+                   meta: Optional[dict] = None,
+                   telemetry: bool = False) -> BenchEntry:
     """Compile-vs-steady-state timing of `fn` (which must block until
     the result is materialised — call block_until_ready/np.asarray
     inside).
@@ -242,11 +285,15 @@ def bench_callable(name: str, fn: Callable[[], object], *,
         fn()
         walls.append(time.perf_counter() - t0)
 
+    # provenance stamp defaults under explicit meta (an explicit
+    # git_sha/jax_version/telemetry key in `meta` wins)
+    stamped = repo_stamp(telemetry=telemetry)
+    stamped.update(meta or {})
     return BenchEntry(name=name, wall_s=min(walls),
                       wall_mean_s=sum(walls) / len(walls),
                       compile_s=compile_s, repeats=len(walls),
                       cycles=cycles, peak_mem_bytes=peak, mem_probe=probe,
-                      meta=dict(meta or {}))
+                      meta=stamped)
 
 
 def write_bench(path: str, suite: str, entries: list, *,

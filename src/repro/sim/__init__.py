@@ -9,12 +9,17 @@
              as one compiled vmap-ed scan (DESIGN.md §10)
 - workloads: closed-loop message-DAG engine on the same SwitchCore
              (collectives / stencil / graph JCT runs, DESIGN.md §7)
+- telemetry: opt-in in-scan counters + flit-sampled tracing threaded
+             through both engines' scan carries, with heatmap and
+             perfetto/Chrome-trace export (DESIGN.md §12)
 """
 
 from .engine import SimConfig, SimResult, SwitchCore, simulate
 from .sweep import sweep_run_workload, sweep_simulate
 from .tables import SimTables
+from .telemetry import TelemetryConfig, TelemetrySnapshot
 from .traffic import make_traffic
 
 __all__ = ["SimConfig", "SimResult", "SwitchCore", "simulate", "SimTables",
-           "make_traffic", "sweep_simulate", "sweep_run_workload"]
+           "make_traffic", "sweep_simulate", "sweep_run_workload",
+           "TelemetryConfig", "TelemetrySnapshot"]

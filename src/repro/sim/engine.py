@@ -68,7 +68,7 @@ from __future__ import annotations
 
 import copy
 import dataclasses
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -76,12 +76,15 @@ import numpy as np
 
 from ..core.routing import UNREACH
 from ..kernels import alloc_rounds, ugal_select
+from . import telemetry as tel
 from .packed import (MAX_ROUTERS, PK, bump_hops_word, pack_record, pk_dst,
                      pk_hops, pk_inter, pk_phase, pk_time)
 from .tables import SimTables
+from .telemetry import TelemetryConfig, TelemetrySnapshot
 from .traffic import Traffic
 
-__all__ = ["SimConfig", "SimResult", "SwitchCore", "simulate"]
+__all__ = ["SimConfig", "SimResult", "SwitchCore", "simulate",
+           "TelemetryConfig"]
 
 BIG = jnp.int32(1 << 30)
 # occupancy values entering UGAL scores are clamped here so that the
@@ -107,11 +110,16 @@ class SimConfig:
     # oracles elsewhere; 'ref' / 'pallas' force a path (the kernels are
     # bit-identical — tests/test_engine_scaling.py)
     kernel_path: str = "auto"
+    # opt-in counters/tracing threaded through the scan carry
+    # (repro.sim.telemetry); the default is fully off and adds ZERO
+    # carry leaves — bit-exact vs a build without the layer
+    telemetry: TelemetryConfig = TelemetryConfig()
 
     def static_key(self) -> tuple:
         """Fields that shape the compiled graph (rate/seed are traced)."""
         return (self.cycles, self.vcs, self.q_net, self.q_src, self.mode,
-                self.n_val_candidates, self.lookahead, self.kernel_path)
+                self.n_val_candidates, self.lookahead, self.kernel_path,
+                self.telemetry.static_key())
 
 
 @dataclasses.dataclass
@@ -129,13 +137,18 @@ class SimResult:
     # (tests/test_sim.py): cumsum(injected) == cumsum(delivered) +
     # in_flight at EVERY cycle prefix; dropped packets never enter the
     # network (refused at a full source queue).
-    per_cycle_injected: np.ndarray = None
-    per_cycle_in_flight: np.ndarray = None
-    per_cycle_dropped: np.ndarray = None
+    per_cycle_injected: Optional[np.ndarray] = None
+    per_cycle_in_flight: Optional[np.ndarray] = None
+    per_cycle_dropped: Optional[np.ndarray] = None
+    # the configured source-queue depth, so `saturated` scales with the
+    # run's actual backlog capacity instead of a hard-coded 64
+    q_src: int = 64
+    telemetry: Optional[TelemetrySnapshot] = None
 
     @property
     def saturated(self) -> bool:
-        return self.src_occupancy > 0.5 * 64 or self.dropped_at_source > 0
+        return (self.src_occupancy > 0.5 * self.q_src
+                or self.dropped_at_source > 0)
 
 
 class SwitchCore:
@@ -169,6 +182,7 @@ class SwitchCore:
         self.W = cfg.lookahead
         self.mode = cfg.mode
         self.C = cfg.n_val_candidates
+        self.tel = cfg.telemetry
         kp = cfg.kernel_path
         assert kp in ("auto", "ref", "pallas"), kp
         self.use_pallas = (kp == "pallas"
@@ -368,11 +382,17 @@ class SwitchCore:
         return out_port, out_vc, eject
 
     def alloc(self, nq_pkt, nq_count, sq_pkt, sq_count,
-              occ, cycle, eject_fold: Callable, eject_acc):
+              occ, cycle, eject_fold: Callable, eject_acc,
+              tel_state=None, trace_sample=None, trace_extra=None):
         """One cycle of W-round switch allocation + compaction.
 
         Returns the four queue arrays plus the folded ejection
         accumulator (see the class docstring for the fold contract).
+        When `tel_state` is passed (a telemetry.TelemetryState, or `()`
+        with telemetry off) it is updated from this cycle's allocation
+        outcome and returned as a sixth element; `trace_sample` /
+        `trace_extra` carry the engine's flow sampler and injection
+        events into the trace ring (repro.sim.telemetry).
         """
         N, P, V, Qn, Qs, W = (self.N, self.P, self.V, self.Qn,
                               self.Qs, self.W)
@@ -478,6 +498,22 @@ class SwitchCore:
         pkt = jnp.concatenate([pkt[..., :2], w2[..., None]], axis=-1)
         arrived = valid[..., None] & (jnp.arange(V) == vc[..., None])
 
+        # ---- telemetry (data-only: nothing below reads tel_state).
+        # Placed before the dequeue so the counters see the same
+        # cycle-start queue depths the kernel saw.
+        if tel_state is not None and self.tel.enabled:
+            cs_t, tr_t = tel_state
+            if self.tel.counters:
+                cs_t = tel.counters.count_cycle(cs_t, nq_count)
+                cs_t = tel.counters.count_alloc(
+                    cs_t, self, cycle, win_net, win_src, win_req,
+                    cs_net, ej_net, cs_src, ej_src, cnt_net, sq_count)
+            if self.tel.trace:
+                tr_t = tel.trace.trace_alloc(
+                    tr_t, self, cycle, valid, pkt, win_net, win_src,
+                    ej_net, ej_src, trace_sample, trace_extra)
+            tel_state = tel.TelemetryState(cs_t, tr_t)
+
         # ---- dequeue + compaction: removing the granted packet at
         # offset g is a static-shift select (slots >= g take their
         # successor) — order-preserving, no gathers or scatters; then
@@ -508,7 +544,9 @@ class SwitchCore:
         nq_count = nq_count + arrived.astype(jnp.int32) - deq_net
         sq_count = sq_count - deq_src
 
-        return (nq_pkt, nq_count, sq_pkt, sq_count, eject_acc)
+        if tel_state is None:
+            return (nq_pkt, nq_count, sq_pkt, sq_count, eject_acc)
+        return (nq_pkt, nq_count, sq_pkt, sq_count, eject_acc, tel_state)
 
 
 def _open_loop_fold(acc, g_net, g_src, pkt_net, pkt_src, cycle):
@@ -560,9 +598,12 @@ def _open_loop_step(core: SwitchCore, traffic: Traffic, rate):
     active = jnp.asarray(traffic.active)
     n_ep, Qs = core.n_ep, core.Qs
     sample = traffic.sample
+    tcfg = core.tel
+    sampler = (tel.trace.flow_sampler(tcfg.trace_sample_shift)
+               if tcfg.trace else None)
 
     def step(carry, cycle):
-        nq_pkt, nq_count, sq_pkt, sq_count, key = carry
+        nq_pkt, nq_count, sq_pkt, sq_count, key, ts = carry
         key, k_inj, k_dst, k_rt = jax.random.split(key, 4)
 
         occ = core.occupancy(nq_count)
@@ -579,18 +620,31 @@ def _open_loop_step(core: SwitchCore, traffic: Traffic, rate):
         sq_pkt, sq_count = core.inject(sq_pkt, sq_count, want, new_pkt)
         injected = want.sum()
 
+        # ---- telemetry at the injection point (data-only)
+        extra = None
+        if tcfg.counters:
+            ts = tel.TelemetryState(
+                tel.counters.count_routes(ts.counters, want, phase),
+                ts.trace)
+        if tcfg.trace:
+            extra = (want & sampler(new_pkt),
+                     tel.trace.pack_events(cycle, tel.trace.KIND_INJECT,
+                                           core.ep_router,
+                                           tel.trace.PORT_EP, new_pkt))
+
         # ---- shared switch pipeline ---------------------------------------
         (nq_pkt, nq_count, sq_pkt, sq_count,
-         (delivered, lat_sum)) = core.alloc(
+         (delivered, lat_sum), ts) = core.alloc(
              nq_pkt, nq_count, sq_pkt, sq_count,
              occ, cycle, _open_loop_fold,
-             (jnp.int32(0), jnp.float32(0.0)))
+             (jnp.int32(0), jnp.float32(0.0)),
+             tel_state=ts, trace_sample=sampler, trace_extra=extra)
 
         in_flight = (nq_count.sum() + sq_count.sum()).astype(jnp.int32)
         stats = (injected.astype(jnp.int32), delivered,
                  lat_sum, sq_count.sum().astype(jnp.int32),
                  dropped.astype(jnp.int32), in_flight)
-        return (nq_pkt, nq_count, sq_pkt, sq_count, key), stats
+        return (nq_pkt, nq_count, sq_pkt, sq_count, key, ts), stats
 
     return step
 
@@ -622,7 +676,9 @@ def _open_loop_runner(tables: SimTables, traffic: Traffic, cfg: SimConfig):
 
 
 def _assemble_result(tables: SimTables, traffic: Traffic, cfg: SimConfig,
-                     n_active: int, stats: tuple) -> SimResult:
+                     n_active: int, stats: tuple,
+                     telemetry: Optional[TelemetrySnapshot] = None
+                     ) -> SimResult:
     """Host-side reduction of per-cycle scan stats into a SimResult
     (shared by `simulate` and the lane-batched sweep engine)."""
     inj, dlv, lat, occ_s, drop, infl = stats
@@ -653,12 +709,16 @@ def _assemble_result(tables: SimTables, traffic: Traffic, cfg: SimConfig,
         per_cycle_injected=inj,
         per_cycle_in_flight=infl,
         per_cycle_dropped=drop,
+        q_src=cfg.q_src,
+        telemetry=telemetry,
     )
 
 
 def simulate(tables: SimTables, traffic: Traffic, cfg: SimConfig) -> SimResult:
     n_active = int(traffic.active.sum())
     core, fn = _open_loop_runner(tables, traffic, cfg)
-    carry0 = core.init_queues() + (jax.random.PRNGKey(cfg.seed),)
-    _, stats = fn(carry0, jnp.float32(cfg.injection_rate))
-    return _assemble_result(tables, traffic, cfg, n_active, stats)
+    carry0 = (core.init_queues() + (jax.random.PRNGKey(cfg.seed),
+                                    tel.init_state(cfg.telemetry, core)))
+    carry, stats = fn(carry0, jnp.float32(cfg.injection_rate))
+    snap = tel.snapshot(cfg.telemetry, carry[5], cfg.cycles)
+    return _assemble_result(tables, traffic, cfg, n_active, stats, snap)

@@ -48,7 +48,7 @@ __all__ = [
     "MSG_JOB_SHIFT", "MAX_JOBS", "MAX_JOB_MSGS",
     "pack_record", "unpack_record", "bump_hops_word",
     "pk_dst", "pk_inter", "pk_time", "pk_hops", "pk_phase", "pk_msg",
-    "pk_job", "pk_job_mid",
+    "pk_flow_key", "pk_job", "pk_job_mid",
 ]
 
 PK = 3                      # int32 words per packed record
@@ -106,6 +106,15 @@ def pk_phase(pkt):
 
 def pk_msg(pkt):
     return pkt[..., 2] >> 7
+
+
+def pk_flow_key(pkt):
+    """Hop-invariant identity of a packet: (word 0, word 1).  Word 0
+    (dst | inter << 16) and word 1 (inject cycle) are fixed for a
+    flit's whole lifetime (`bump_hops_word` only touches word 2), so
+    telemetry's open-loop trace sampler can hash them at every hop and
+    get the same answer."""
+    return pkt[..., 0], pkt[..., 1]
 
 
 def pk_job(pkt):

@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import telemetry as tel
 from .engine import (SimConfig, SimResult, SwitchCore, _assemble_result,
                      _cache_put, _open_loop_step, simulate,
                      tables_signature)
@@ -176,21 +177,32 @@ def sweep_simulate(tables: TablesLanes, traffic: Traffic, cfg: SimConfig,
     carry0 = tuple(jnp.zeros((L,) + q.shape, q.dtype)
                    for q in core.init_queues())
     keys0 = jnp.stack([jax.random.PRNGKey(s) for s in seeds_l])
-    carry0 = carry0 + (keys0,)
+    # the telemetry element is part of the lane-mapped carry: counters
+    # are pure data-parallel accumulators (no scatters besides the
+    # trace ring), so per-lane telemetry comes out of the SAME compile
+    tel0 = jax.tree_util.tree_map(
+        lambda a: jnp.zeros((L,) + a.shape, a.dtype),
+        tel.init_state(cfg.telemetry, core))
+    carry0 = carry0 + (keys0, tel0)
     rate_v = jnp.asarray(rates_l, jnp.float32)
 
     if tables_vary:
         # the stacked mask tables ride the lane axis as one operand
-        _, stats = fn(SwitchCore.device_tables(tab), carry0, rate_v)
+        carry, stats = fn(SwitchCore.device_tables(tab), carry0, rate_v)
     else:
-        _, stats = fn(carry0, rate_v)
+        carry, stats = fn(carry0, rate_v)
 
     n_active = int(traffic.active.sum())
     out = []
     for i in range(L):
         lane_stats = tuple(np.asarray(s)[i] for s in stats)
+        snap = tel.snapshot(
+            cfg.telemetry,
+            jax.tree_util.tree_map(lambda a: a[i], carry[5]),
+            cfg.cycles)
         out.append(_assemble_result(tab.lane(i if tab.lanes > 1 else 0),
-                                    traffic, cfgs[i], n_active, lane_stats))
+                                    traffic, cfgs[i], n_active, lane_stats,
+                                    snap))
     return out
 
 

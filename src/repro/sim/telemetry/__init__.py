@@ -1,0 +1,126 @@
+"""In-scan fabric telemetry: counters + flit-sampled tracing (DESIGN.md §12).
+
+The engines report end-of-run scalars; the paper's interesting claims
+(Fig 6 saturation, §VI congestion, Table III degraded-mode inflation)
+are about *where* load concentrates.  This package threads an opt-in,
+shape-static observability layer through the scan carry of BOTH engines
+(`repro.sim.engine.simulate` and the closed-loop workload engine):
+
+  - `counters`  — per-router / per-channel int32 accumulators (channel
+    flits-forwarded, per-allocation-round grant/deny, MIN-vs-VAL route
+    choices, queue-occupancy sum/max, ejection latency sum/count/max
+    per destination router), updated with pure data-parallel ops (no
+    scatters) so the lane-batched sweep engine reports per-lane
+    counters from ONE compile (DESIGN.md §10);
+  - `trace`     — a deterministic hash-sampled subset of flits writes
+    per-hop event records (cycle, router, port, phase, kind) into a
+    fixed-size ring buffer carried through the scan, decoded host-side
+    into per-flit span trees;
+  - `export`    — channel-load heatmaps, per-router tables (feeding
+    `WorkloadReport` / `MultiJobResult`) and perfetto-compatible
+    Chrome-trace JSON (routers as tracks, flit spans, phase markers)
+    viewable at https://ui.perfetto.dev.
+
+Contract: with `TelemetryConfig()` (everything off) the carry gains an
+EMPTY pytree — zero extra arrays, identical jaxpr, bit-exact results
+vs the pre-telemetry engines (tests/test_telemetry.py re-runs the
+golden-pinned configs).  With telemetry on, the additions are DATA
+ONLY: no RNG is consumed and no engine value depends on a telemetry
+value, so core results stay bit-identical with counters enabled too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import numpy as np
+
+from .counters import (CounterState, CountersSnapshot, decode_counters,
+                       init_counters)
+from .trace import (EVENT_DTYPE, TraceState, build_spans, decode_trace,
+                    init_trace, sampled_fids)
+
+__all__ = [
+    "TelemetryConfig", "TelemetryState", "TelemetrySnapshot",
+    "init_state", "snapshot",
+    "CounterState", "CountersSnapshot", "TraceState",
+    "build_spans", "sampled_fids", "EVENT_DTYPE",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Opt-in telemetry knobs; part of the engines' static config.
+
+    Joins `SimConfig.static_key()` / `WorkloadSimConfig.static_key()`:
+    flipping any field compiles a separate executable (the carry pytree
+    changes shape), so telemetry-off runs never pay for the layer.
+    """
+    counters: bool = False
+    trace: bool = False
+    # sample 1 / 2**shift of flows (messages in the closed loop, packets
+    # in the open loop); 0 traces everything
+    trace_sample_shift: int = 3
+    # ring-buffer capacity in events; per-cycle overflow is dropped and
+    # counted, across cycles the ring wraps (oldest events overwritten)
+    trace_capacity: int = 4096
+
+    def __post_init__(self):
+        assert 0 <= self.trace_sample_shift < 32, self.trace_sample_shift
+        assert self.trace_capacity > 0, self.trace_capacity
+
+    @property
+    def enabled(self) -> bool:
+        return self.counters or self.trace
+
+    def static_key(self) -> tuple:
+        return (self.counters, self.trace, self.trace_sample_shift,
+                self.trace_capacity)
+
+
+class TelemetryState(NamedTuple):
+    """The telemetry element of a scan carry.  Each member is either a
+    per-feature state pytree or `()` when that feature is off; the
+    whole element is `()` (no leaves at all) when telemetry is off."""
+    counters: Any            # CounterState | ()
+    trace: Any               # TraceState   | ()
+
+
+@dataclasses.dataclass
+class TelemetrySnapshot:
+    """Host-side decode of a run's final TelemetryState."""
+    cycles: int                                   # normalisation span
+    counters: Optional[CountersSnapshot] = None
+    events: Optional[np.ndarray] = None           # structured EVENT_DTYPE
+    events_dropped: int = 0                       # same-cycle overflow
+
+    def spans(self) -> list:
+        """Per-flit span trees of the traced events (trace.build_spans)."""
+        if self.events is None:
+            return []
+        return build_spans(self.events)
+
+
+def init_state(tel: TelemetryConfig, core) -> Any:
+    """Initial telemetry carry element for `core` (a SwitchCore):
+    `()` when off — the carry pytree gains no leaves and the compiled
+    step is unchanged."""
+    if not tel.enabled:
+        return ()
+    return TelemetryState(
+        counters=init_counters(core) if tel.counters else (),
+        trace=init_trace(tel.trace_capacity) if tel.trace else ())
+
+
+def snapshot(tel: TelemetryConfig, state: Any,
+             cycles: int) -> Optional[TelemetrySnapshot]:
+    """Decode a final telemetry carry element into host arrays.
+    `cycles` is the span counters are normalised over (cfg.cycles for
+    the open loop, the trimmed cycles_run for closed-loop runs)."""
+    if tel is None or not tel.enabled:
+        return None
+    cs = decode_counters(state.counters, cycles) if tel.counters else None
+    ev, dropped = (decode_trace(state.trace) if tel.trace else (None, 0))
+    return TelemetrySnapshot(cycles=int(cycles), counters=cs,
+                             events=ev, events_dropped=dropped)

@@ -1,0 +1,218 @@
+"""Per-router / per-channel counter accumulators (DESIGN.md §12).
+
+Everything here is reconstructed from state the allocation kernel
+already computes — no kernel change, no extra gathers on the hot path:
+
+  - `chan_flits[r, o]`: a live output channel forwards exactly one flit
+    in the cycles where its winning-request index is set (`win_req[r,o]
+    >= 0` ⇔ the downstream (router, port) receives a packet), so the
+    per-channel counter is a [N, P] compare-and-add;
+  - per-round grant/deny: the kernel grants window slot w in round w
+    (`cs_n = where(win_n, w, cs_n)` in `_alloc_rounds_math`), so the
+    final grant offsets ARE round indices.  A queue requests in round w
+    iff it still holds a packet there and was not granted earlier:
+    ``req_w = (count > w) & ((g < 0) | (g >= w))`` with
+    ``g = max(chan_slot, ej_slot)``; ``grant_w = (g == w)``; denied =
+    requested & ~granted (this includes backpressure/budget blocks, not
+    just arbitration losses — that is the congestion signal we want);
+  - ejection stats read the granted window slots via one
+    take_along_axis over the W axis; endpoint (source-queue) values
+    reach their router through the same epr_index gather the engine
+    uses for ejection ranking — scatter-free, so the whole layer
+    vmaps cleanly over sweep lanes.
+
+Counters are int32.  Worst-case budget (documented, not assumed): the
+occupancy sum grows by at most P*V*Qn per router per cycle — at q=25
+(P=37, V=4, Qn=16) that is ~2.4k/cycle, overflowing int32 only past
+~900k cycles, beyond the closed-loop max_cycles=200k; every other
+counter grows by at most P (or p) per cycle.
+
+Conservation identities (asserted by tests/test_telemetry.py):
+
+  sum(chan_flits)  == total hop traversals == sum of pk_hops over
+                      delivered flits on a drained run (the src-queue ->
+                      first-router traversal counts as a hop on both
+                      sides; eject-at-source flits have 0 hops and use
+                      no channel);
+  sum(ej_count)    == flits delivered;
+  sum(alloc_grant) == sum(chan_flits) + sum(ej_count)  (every grant is
+                      a channel forward or an ejection).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..packed import PK, pk_hops, pk_time
+
+__all__ = ["CounterState", "CountersSnapshot", "init_counters",
+           "decode_counters", "count_cycle", "count_routes", "count_alloc"]
+
+
+class CounterState(NamedTuple):
+    """Carry arrays (all int32, all zero-initialised)."""
+    chan_flits: jnp.ndarray       # [N, P] flits forwarded per channel
+    alloc_grant: jnp.ndarray      # [N, W] grants per allocation round
+    alloc_deny: jnp.ndarray       # [N, W] requests denied per round
+    route_min: jnp.ndarray        # [n_ep] MIN route choices at injection
+    route_val: jnp.ndarray        # [n_ep] VAL/non-minimal choices
+    occ_sum: jnp.ndarray          # [N] sum over cycles of queued flits
+    occ_max: jnp.ndarray          # [N] max per-(port,VC) queue depth seen
+    ej_count: jnp.ndarray         # [N] flits ejected at this router
+    ej_lat_sum: jnp.ndarray       # [N] sum of ejected-flit latencies
+    ej_lat_max: jnp.ndarray       # [N] max ejected-flit latency
+    ej_hops_sum: jnp.ndarray      # [N] sum of ejected-flit hop counts
+
+
+def init_counters(core) -> CounterState:
+    N, P, W, n_ep = core.N, core.P, core.W, core.n_ep
+    z = lambda *shape: jnp.zeros(shape, jnp.int32)
+    return CounterState(
+        chan_flits=z(N, P), alloc_grant=z(N, W), alloc_deny=z(N, W),
+        route_min=z(n_ep), route_val=z(n_ep),
+        occ_sum=z(N), occ_max=z(N),
+        ej_count=z(N), ej_lat_sum=z(N), ej_lat_max=z(N),
+        ej_hops_sum=z(N))
+
+
+def _ep_to_router(core, vals, reduce: str = "sum"):
+    """Per-endpoint values -> per-router totals, scatter-free: endpoints
+    are sorted by router with exactly p per endpoint-router, so a block
+    reduce + the epr_index gather routes them (same trick as the
+    engine's ejection ranking; non-endpoint routers contribute 0)."""
+    blocks = vals.reshape(core.n_epr, core.p)
+    agg = blocks.sum(axis=1) if reduce == "sum" else blocks.max(axis=1)
+    g = agg[jnp.maximum(core.epr_index, 0)]
+    return jnp.where(core.epr_index >= 0, g, 0)
+
+
+def count_cycle(cs: CounterState, nq_count) -> CounterState:
+    """Cycle-start queue-occupancy accumulation (network queues)."""
+    return cs._replace(
+        occ_sum=cs.occ_sum + nq_count.sum(axis=(1, 2)),
+        occ_max=jnp.maximum(cs.occ_max, nq_count.max(axis=(1, 2))))
+
+
+def count_routes(cs: CounterState, want, phase) -> CounterState:
+    """Injection-time route-choice counts: phase 1 = MIN, 0 = VAL
+    (route_decision's convention; `want` masks actual injections)."""
+    w = want.astype(jnp.int32)
+    return cs._replace(route_min=cs.route_min + w * (phase == 1),
+                       route_val=cs.route_val + w * (phase != 1))
+
+
+def count_alloc(cs: CounterState, core, cycle, win_net, win_src, win_req,
+                chan_net, ej_net, chan_src, ej_src,
+                cnt_net, sq_count) -> CounterState:
+    """Per-cycle counter update from the allocation outcome.
+
+    Called by SwitchCore.alloc with cycle-START queue counts
+    (`cnt_net` is the live-masked [N, P*V] depth array the kernel saw,
+    `sq_count` the per-endpoint source depths) and the final grant
+    offsets split by kind (`chan_*` / `ej_*`, -1 = no grant).
+    """
+    N, P, V, W = core.N, core.P, core.V, core.W
+    i32 = jnp.int32
+    n_ep = core.n_ep
+
+    chan_flits = cs.chan_flits + ((win_req >= 0)
+                                  & (core.nbr >= 0)).astype(i32)
+
+    # ---- per-round grant/deny reconstruction (module docstring)
+    g_net = jnp.maximum(chan_net, ej_net)                  # [N, P, V]
+    g_src = jnp.maximum(chan_src, ej_src)                  # [n_ep]
+    cnt3 = cnt_net.reshape(N, P, V)
+    grants, denies = [], []
+    for w in range(W):
+        req_n = (cnt3 > w) & ((g_net < 0) | (g_net >= w))
+        req_s = (sq_count > w) & ((g_src < 0) | (g_src >= w))
+        gr_n, gr_s = g_net == w, g_src == w
+        grants.append(gr_n.sum(axis=(1, 2))
+                      + _ep_to_router(core, gr_s.astype(i32)))
+        denies.append((req_n & ~gr_n).sum(axis=(1, 2))
+                      + _ep_to_router(core, (req_s & ~gr_s).astype(i32)))
+    alloc_grant = cs.alloc_grant + jnp.stack(grants, axis=1)
+    alloc_deny = cs.alloc_deny + jnp.stack(denies, axis=1)
+
+    # ---- ejection stats from the granted window slots (the ejecting
+    # router IS the destination router)
+    idx_n = jnp.broadcast_to(jnp.maximum(ej_net, 0)[..., None, None],
+                             (N, P, V, 1, PK))
+    pkt_n = jnp.take_along_axis(win_net, idx_n, axis=3)[:, :, :, 0, :]
+    m_n = ej_net >= 0
+    lat_n = jnp.where(m_n, cycle - pk_time(pkt_n) + 1, 0)
+    hop_n = jnp.where(m_n, pk_hops(pkt_n), 0)
+
+    idx_s = jnp.broadcast_to(jnp.maximum(ej_src, 0)[:, None, None],
+                             (n_ep, 1, PK))
+    pkt_s = jnp.take_along_axis(win_src, idx_s, axis=1)[:, 0, :]
+    m_s = ej_src >= 0
+    lat_s = jnp.where(m_s, cycle - pk_time(pkt_s) + 1, 0)
+    hop_s = jnp.where(m_s, pk_hops(pkt_s), 0)
+
+    ej_count = (cs.ej_count + m_n.sum(axis=(1, 2))
+                + _ep_to_router(core, m_s.astype(i32)))
+    ej_lat_sum = (cs.ej_lat_sum + lat_n.sum(axis=(1, 2))
+                  + _ep_to_router(core, lat_s))
+    ej_hops_sum = (cs.ej_hops_sum + hop_n.sum(axis=(1, 2))
+                   + _ep_to_router(core, hop_s))
+    ej_lat_max = jnp.maximum(
+        cs.ej_lat_max,
+        jnp.maximum(lat_n.max(axis=(1, 2)),
+                    _ep_to_router(core, lat_s, reduce="max")))
+
+    return cs._replace(
+        chan_flits=chan_flits, alloc_grant=alloc_grant,
+        alloc_deny=alloc_deny, ej_count=ej_count, ej_lat_sum=ej_lat_sum,
+        ej_lat_max=ej_lat_max, ej_hops_sum=ej_hops_sum)
+
+
+# ---------------------------------------------------------------------------
+# host-side decode
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CountersSnapshot:
+    """Host (numpy, int64) view of a run's final CounterState."""
+    cycles: int
+    chan_flits: np.ndarray        # [N, P]
+    alloc_grant: np.ndarray       # [N, W]
+    alloc_deny: np.ndarray        # [N, W]
+    route_min: np.ndarray         # [n_ep]
+    route_val: np.ndarray         # [n_ep]
+    occ_sum: np.ndarray           # [N]
+    occ_max: np.ndarray           # [N]
+    ej_count: np.ndarray          # [N]
+    ej_lat_sum: np.ndarray        # [N]
+    ej_lat_max: np.ndarray        # [N]
+    ej_hops_sum: np.ndarray       # [N]
+
+    def channel_load(self) -> np.ndarray:
+        """Per-channel utilisation: flits forwarded / cycle in [0, 1]."""
+        return self.chan_flits / max(self.cycles, 1)
+
+    def deny_rate(self) -> np.ndarray:
+        """Per-router fraction of queue-requests denied per cycle."""
+        g = self.alloc_grant.sum(axis=1)
+        d = self.alloc_deny.sum(axis=1)
+        return d / np.maximum(g + d, 1)
+
+    def mean_queue_occupancy(self) -> np.ndarray:
+        """Per-router mean total network-queue depth (flits)."""
+        return self.occ_sum / max(self.cycles, 1)
+
+    def mean_ej_latency(self) -> np.ndarray:
+        """Per-destination-router mean flit latency (nan = no flits)."""
+        with np.errstate(invalid="ignore"):
+            return np.where(self.ej_count > 0,
+                            self.ej_lat_sum / np.maximum(self.ej_count, 1),
+                            np.nan)
+
+
+def decode_counters(cs: CounterState, cycles: int) -> CountersSnapshot:
+    f = [np.asarray(a, dtype=np.int64) for a in cs]
+    return CountersSnapshot(int(cycles), *f)

@@ -1,0 +1,264 @@
+"""Flit-sampled tracing: in-carry event ring buffer (DESIGN.md §12).
+
+Sampling.  The packed flit record has no spare bits (word 2 uses 31 of
+32, and bit 31 must stay clear for the arithmetic shift in `pk_msg`),
+so instead of tagging sampled flits we recompute a deterministic hash
+at every event site from fields that are INVARIANT across hops:
+
+  - closed loop: the packed MSG field (`msg_sampler`) — all flits and
+    all hops of one message sample together, giving whole-message span
+    trees;
+  - open loop: the flow key (word 0 = dst|inter, word 1 = inject
+    cycle; `flow_sampler`) — a packet's identity for its lifetime.
+
+A flow is sampled iff the low `shift` bits of a mixed 32-bit hash are
+zero (rate 1/2**shift, shift 0 = trace everything); the same hash is
+exposed host-side (`sampled_fids`) so tests and decoders can predict
+exactly which messages were traced.
+
+Ring buffer.  Events are EV=6 int32 words:
+
+  word 0  cycle
+  word 1  router | port << 16     (port: input port for hops/ejects,
+                                   PORT_EP = 0x7FFF for endpoint-side
+                                   inject / source-queue-eject events)
+  word 2  packed MSG field (0 in the open loop)
+  word 3  inject cycle (pk_time)
+  word 4  dst | hops << 15 | phase << 21 | kind << 22
+  word 5  intermediate router (pk_inter)
+
+Word 5 completes the flit's hop-invariant identity: span grouping keys
+on (msg, inject cycle, dst, inter), which is unique per message in the
+closed loop and collision-free per flow in the open loop (where msg is
+always 0, two same-cycle packets to the same destination still differ
+in their VAL intermediate except for genuinely indistinguishable
+MIN-phase twins).
+
+Each cycle's candidate events (arrivals, ejections, injections) are
+masked by site-validity & sampling, ranked by an exclusive cumsum, and
+scattered at `(n + rank) % capacity` — one scatter per cycle, distinct
+indices, deterministic.  Events beyond `capacity` within ONE cycle are
+dropped (and counted); across cycles the ring wraps, keeping the most
+recent `capacity` events.  This is the only scatter telemetry adds,
+which is why tracing (unlike counters) is priced for single-lane runs
+— under the sweep engine's lane vmap a batched scatter is the hottest
+lowering on CPU (DESIGN.md §9/§10).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..packed import (pk_dst, pk_flow_key, pk_hops, pk_inter, pk_msg,
+                      pk_phase, pk_time)
+
+__all__ = ["EV", "PORT_EP", "KIND_INJECT", "KIND_HOP", "KIND_EJECT",
+           "TraceState", "init_trace", "msg_sampler", "flow_sampler",
+           "sampled_fids", "pack_events", "ring_append", "trace_alloc",
+           "EVENT_DTYPE", "decode_trace", "build_spans"]
+
+EV = 6                       # int32 words per event record
+PORT_EP = 0x7FFF             # port marker for endpoint-side events
+KIND_INJECT = 0              # flit enters its source queue
+KIND_HOP = 1                 # flit arrives at a router input port
+KIND_EJECT = 2               # flit delivered (net queue or src queue)
+
+
+class TraceState(NamedTuple):
+    buf: jnp.ndarray          # [capacity, EV] int32
+    n: jnp.ndarray            # scalar int32: events written (monotone)
+    dropped: jnp.ndarray      # scalar int32: same-cycle overflow drops
+
+
+def init_trace(capacity: int) -> TraceState:
+    return TraceState(jnp.zeros((capacity, EV), jnp.int32),
+                      jnp.int32(0), jnp.int32(0))
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+
+def _mix32(x):
+    """32-bit integer finalizer (xor-shift-multiply avalanche)."""
+    h = jnp.asarray(x).astype(jnp.uint32)
+    h = (h ^ (h >> 16)) * jnp.uint32(0x45D9F3B)
+    h = (h ^ (h >> 16)) * jnp.uint32(0x45D9F3B)
+    return h ^ (h >> 16)
+
+
+def _sampled(key, shift: int):
+    return (_mix32(key) & jnp.uint32((1 << shift) - 1)) == 0
+
+
+def msg_sampler(shift: int):
+    """Closed loop: sample whole messages by the packed MSG field."""
+    return lambda pkt: _sampled(pk_msg(pkt), shift)
+
+
+def flow_sampler(shift: int):
+    """Open loop: sample packets by the hop-invariant flow key."""
+    def sample(pkt):
+        w0, w1 = pk_flow_key(pkt)
+        key = (w0.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)
+               ^ w1.astype(jnp.uint32))
+        return _sampled(key, shift)
+    return sample
+
+
+def sampled_fids(fids, shift: int) -> np.ndarray:
+    """Host-side predicate: which MSG-field values `msg_sampler` traces
+    (bool array, same shape as `fids`)."""
+    return np.asarray(_sampled(np.asarray(fids, np.int64) & 0xFFFFFFFF,
+                               shift))
+
+
+# ---------------------------------------------------------------------------
+# event collection (device side)
+# ---------------------------------------------------------------------------
+
+def pack_events(cycle, kind: int, router, port, pkt):
+    """Pack one event site into flat [E, EV] rows (E = router.size)."""
+    r = jnp.asarray(router, jnp.int32).reshape(-1)
+    p = jnp.broadcast_to(jnp.asarray(port, jnp.int32),
+                         jnp.shape(router)).reshape(-1)
+    flat = pkt.reshape(-1, pkt.shape[-1])
+    w0 = jnp.broadcast_to(jnp.asarray(cycle, jnp.int32), r.shape)
+    w1 = r | (p << 16)
+    w4 = (pk_dst(flat) | (pk_hops(flat) << 15) | (pk_phase(flat) << 21)
+          | (jnp.int32(kind) << 22))
+    return jnp.stack([w0, w1, pk_msg(flat), pk_time(flat), w4,
+                      pk_inter(flat)], axis=-1)
+
+
+def ring_append(ts: TraceState, ev, mask) -> TraceState:
+    """Append masked event rows to the ring.  Write positions come from
+    an exclusive cumsum of the mask, so indices are distinct and the
+    single scatter is deterministic; rows past the capacity within one
+    call are dropped and counted."""
+    buf, n, dropped = ts
+    cap = buf.shape[0]
+    k = mask.astype(jnp.int32)
+    rank = jnp.cumsum(k) - k
+    write = mask & (rank < cap)
+    idx = jnp.where(write, (n + rank) % cap, cap)       # cap = OOB drop
+    buf = buf.at[idx].set(ev, mode="drop")
+    wrote = write.sum()
+    return TraceState(buf, n + wrote, dropped + (k.sum() - wrote))
+
+
+def trace_alloc(ts: TraceState, core, cycle, valid, pkt_arr,
+                win_net, win_src, ej_net, ej_src, sampler,
+                extra=None) -> TraceState:
+    """Collect one cycle's events from the allocation outcome: hop
+    arrivals (`valid`/`pkt_arr` are the engine's dense per-(router,
+    port) arrival view), ejections (granted window slots), plus the
+    engine-provided injection events (`extra = (mask, rows)`), as ONE
+    ring append."""
+    N, P, V, n_ep = core.N, core.P, core.V, core.n_ep
+    PKw = win_net.shape[-1]
+    evs, masks = [], []
+    if extra is not None:
+        m_e, ev_e = extra
+        evs.append(ev_e)
+        masks.append(m_e.reshape(-1))
+
+    routers = jnp.broadcast_to(jnp.arange(N)[:, None], (N, P))
+    ports = jnp.broadcast_to(jnp.arange(P)[None, :], (N, P))
+    evs.append(pack_events(cycle, KIND_HOP, routers, ports, pkt_arr))
+    masks.append((valid & sampler(pkt_arr)).reshape(-1))
+
+    idx_n = jnp.broadcast_to(jnp.maximum(ej_net, 0)[..., None, None],
+                             (N, P, V, 1, PKw))
+    pkt_n = jnp.take_along_axis(win_net, idx_n, axis=3)[:, :, :, 0, :]
+    r3 = jnp.broadcast_to(jnp.arange(N)[:, None, None], (N, P, V))
+    p3 = jnp.broadcast_to(jnp.arange(P)[None, :, None], (N, P, V))
+    evs.append(pack_events(cycle, KIND_EJECT, r3, p3, pkt_n))
+    masks.append(((ej_net >= 0) & sampler(pkt_n)).reshape(-1))
+
+    idx_s = jnp.broadcast_to(jnp.maximum(ej_src, 0)[:, None, None],
+                             (n_ep, 1, PKw))
+    pkt_s = jnp.take_along_axis(win_src, idx_s, axis=1)[:, 0, :]
+    evs.append(pack_events(cycle, KIND_EJECT, core.ep_router,
+                           PORT_EP, pkt_s))
+    masks.append(((ej_src >= 0) & sampler(pkt_s)).reshape(-1))
+
+    return ring_append(ts, jnp.concatenate(evs),
+                       jnp.concatenate(masks))
+
+
+# ---------------------------------------------------------------------------
+# host-side decode
+# ---------------------------------------------------------------------------
+
+EVENT_DTYPE = np.dtype([
+    ("cycle", np.int32), ("router", np.int32), ("port", np.int32),
+    ("msg", np.int32), ("time", np.int32), ("dst", np.int32),
+    ("hops", np.int32), ("phase", np.int32), ("kind", np.int32),
+    ("inter", np.int32)])
+
+
+def decode_trace(ts: TraceState):
+    """Final TraceState -> (structured event array in chronological
+    order, same-cycle overflow drop count).  When the ring wrapped,
+    only the most recent `capacity` events survive."""
+    buf = np.asarray(ts.buf)
+    n, dropped = int(ts.n), int(ts.dropped)
+    cap = buf.shape[0]
+    if n <= cap:
+        rows = buf[:n]
+    else:
+        s = n % cap
+        rows = np.concatenate([buf[s:], buf[:s]])
+    ev = np.zeros(len(rows), dtype=EVENT_DTYPE)
+    ev["cycle"] = rows[:, 0]
+    ev["router"] = rows[:, 1] & 0xFFFF
+    ev["port"] = rows[:, 1] >> 16
+    ev["msg"] = rows[:, 2]
+    ev["time"] = rows[:, 3]
+    ev["dst"] = rows[:, 4] & 0x7FFF
+    ev["hops"] = (rows[:, 4] >> 15) & 0x3F
+    ev["phase"] = (rows[:, 4] >> 21) & 1
+    ev["kind"] = rows[:, 4] >> 22
+    ev["inter"] = rows[:, 5]
+    return ev, dropped
+
+
+def build_spans(events: np.ndarray) -> list:
+    """Group decoded events into per-flit spans.
+
+    A flit is identified by its hop-invariant fields (msg, inject
+    cycle, dst, inter) — unique per message in the closed loop and
+    per flow in the open loop (module docstring).  Returns dicts
+    sorted by that key: ``{msg, dst, phase, start, end, src_router,
+    end_router, n_hops, hops: [(cycle, router, port), ...]}`` with
+    None for unobserved endpoints (ring overwrite or capacity drop)."""
+    spans = {}
+    for e in events:
+        key = (int(e["msg"]), int(e["time"]), int(e["dst"]),
+               int(e["inter"]))
+        sp = spans.get(key)
+        if sp is None:
+            sp = spans[key] = {
+                "msg": key[0], "inject_cycle": key[1], "dst": key[2],
+                "phase": int(e["phase"]), "start": None, "end": None,
+                "src_router": None, "end_router": None, "n_hops": None,
+                "hops": []}
+        kind = int(e["kind"])
+        if kind == KIND_INJECT:
+            sp["start"] = int(e["cycle"])
+            sp["src_router"] = int(e["router"])
+        elif kind == KIND_HOP:
+            sp["hops"].append((int(e["cycle"]), int(e["router"]),
+                               int(e["port"])))
+            sp["phase"] = int(e["phase"])
+        else:
+            sp["end"] = int(e["cycle"])
+            sp["end_router"] = int(e["router"])
+            sp["n_hops"] = int(e["hops"])
+    for sp in spans.values():
+        sp["hops"].sort()
+    return [spans[k] for k in sorted(spans)]

@@ -44,11 +44,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import telemetry as tel
 from ..engine import (BIG, SimConfig, SwitchCore, _cache_put,
                       tables_signature)
 from ..packed import (MAX_JOB_MSGS, MAX_JOBS, MSG_JOB_SHIFT, pack_record,
                       pk_msg)
 from ..tables import SimTables
+from ..telemetry import TelemetryConfig, TelemetrySnapshot
 from .ir import Workload
 from .mapping import place_ranks
 
@@ -68,18 +70,23 @@ class WorkloadSimConfig:
     chunk: int = 256                  # cycles per compiled scan chunk
     max_cycles: int = 200_000         # give up (makespan = inf) past this
     kernel_path: str = "auto"         # auto | ref | pallas (DESIGN.md §9)
+    # opt-in counters/tracing (repro.sim.telemetry); default off adds
+    # zero carry leaves and is bit-exact vs a build without the layer
+    telemetry: TelemetryConfig = TelemetryConfig()
 
     def to_sim_config(self) -> SimConfig:
         return SimConfig(vcs=self.vcs, q_net=self.q_net, q_src=self.q_src,
                          mode=self.mode,
                          n_val_candidates=self.n_val_candidates,
                          lookahead=self.lookahead, seed=self.seed,
-                         kernel_path=self.kernel_path)
+                         kernel_path=self.kernel_path,
+                         telemetry=self.telemetry)
 
     def static_key(self) -> tuple:
         return (self.vcs, self.q_net, self.q_src, self.mode,
                 self.n_val_candidates, self.lookahead, self.placement,
-                self.chunk, self.kernel_path)
+                self.chunk, self.kernel_path,
+                self.telemetry.static_key())
 
 
 @dataclasses.dataclass
@@ -102,6 +109,7 @@ class WorkloadResult:
     msg_done: np.ndarray              # [M] completion cycle (-1 never)
     per_cycle_delivered: np.ndarray   # [cycles_run]
     ep_of_rank: np.ndarray            # [n_ranks] the placement used
+    telemetry: Optional[TelemetrySnapshot] = None
 
     @property
     def achieved_bw(self) -> float:
@@ -250,9 +258,15 @@ def _space_runner(tables: SimTables, wls: Tuple[Workload, ...],
         sweep engine vmaps it over a lane axis, DESIGN.md §10)."""
         return lambda carry, cycle: step(c, carry, cycle)
 
+    tcfg = core.tel
+    # closed-loop tracing samples whole MESSAGES: every flit and hop of
+    # a sampled message hashes the same packed MSG field
+    sampler = (tel.trace.msg_sampler(tcfg.trace_sample_shift)
+               if tcfg.trace else None)
+
     def step(c, carry, cycle):
         (nq_pkt, nq_count, sq_pkt, sq_count, admit,
-         sent, flits_del, start_c, done_c, key) = carry
+         sent, flits_del, start_c, done_c, key, ts) = carry
         key, k_rt = jax.random.split(key)
 
         occ = c.occupancy(nq_count)
@@ -283,11 +297,24 @@ def _space_runner(tables: SimTables, wls: Tuple[Workload, ...],
         sent = sent.at[msel].add(1, mode="drop")
         start_c = start_c.at[msel].min(cycle, mode="drop")
 
+        # ---- telemetry at the injection point (data-only)
+        extra = None
+        if tcfg.counters:
+            ts = tel.TelemetryState(
+                tel.counters.count_routes(ts.counters, want, phase),
+                ts.trace)
+        if tcfg.trace:
+            extra = (want & sampler(new_pkt),
+                     tel.trace.pack_events(cycle, tel.trace.KIND_INJECT,
+                                           c.ep_router,
+                                           tel.trace.PORT_EP, new_pkt))
+
         # ---- shared switch pipeline with the per-message fold
         (nq_pkt, nq_count, sq_pkt, sq_count,
-         (flits_del, delivered)) = c.alloc(
+         (flits_del, delivered), ts) = c.alloc(
              nq_pkt, nq_count, sq_pkt, sq_count,
-             occ, cycle, fold, (flits_del, jnp.int32(0)))
+             occ, cycle, fold, (flits_del, jnp.int32(0)),
+             tel_state=ts, trace_sample=sampler, trace_extra=extra)
 
         now_done = flits_del >= size
         done_c = jnp.where(now_done & (done_c == BIG), cycle + 1, done_c)
@@ -299,7 +326,7 @@ def _space_runner(tables: SimTables, wls: Tuple[Workload, ...],
         n_done_job = ncs[job_off[1:]] - ncs[job_off[:-1]]   # [J]
         stats = (want.sum().astype(jnp.int32), delivered, n_done_job)
         return (nq_pkt, nq_count, sq_pkt, sq_count, admit,
-                sent, flits_del, start_c, done_c, key), stats
+                sent, flits_del, start_c, done_c, key, ts), stats
 
     def run_chunk_const(carry, offset):
         cycles = offset + jnp.arange(cfg.chunk, dtype=jnp.int32)
@@ -319,7 +346,8 @@ def _space_runner(tables: SimTables, wls: Tuple[Workload, ...],
             jnp.zeros((M,), jnp.int32),                     # flits_delivered
             jnp.full((M,), BIG, jnp.int32),                 # start cycle
             jnp.full((M,), BIG, jnp.int32),                 # done cycle
-            key0)
+            key0,
+            tel.init_state(tcfg, core))                     # telemetry
 
     # the carry is donated: it is threaded through every chunk call and
     # aliases the returned carry, so queue state is updated in place
@@ -342,7 +370,7 @@ def _chunk_runner(tables: SimTables, wl: Workload, ep_of_rank: np.ndarray,
 def _workload_result(wl: Workload, cfg: WorkloadSimConfig,
                      ep_of_rank: np.ndarray, msg_state: tuple,
                      per_cycle_dlv: np.ndarray, completed: bool,
-                     cycles_run: int) -> WorkloadResult:
+                     cycles_run: int, tel_state=None) -> WorkloadResult:
     """Host-side reduction of final message counters into a
     WorkloadResult (shared by `run_workload` and the lane sweep)."""
     sent, flits_del, start_c, done_c = (
@@ -357,6 +385,10 @@ def _workload_result(wl: Workload, cfg: WorkloadSimConfig,
         # trailing cycles are post-completion and deliver nothing)
         cycles_run = int(done_c.max())
         per_cycle_dlv = per_cycle_dlv[:cycles_run]
+    # counters normalise over the trimmed span: the overrun cycles are
+    # post-drain (queues empty, no grants) so only occ_sum would be
+    # diluted by including them
+    snap = tel.snapshot(cfg.telemetry, tel_state, cycles_run)
 
     return WorkloadResult(
         name=wl.name, mode=cfg.mode, placement=cfg.placement,
@@ -369,6 +401,7 @@ def _workload_result(wl: Workload, cfg: WorkloadSimConfig,
         msg_start=msg_start, msg_done=msg_done,
         per_cycle_delivered=per_cycle_dlv,
         ep_of_rank=ep_of_rank,
+        telemetry=snap,
     )
 
 
@@ -395,10 +428,11 @@ def run_workload(tables: SimTables, wl: Workload,
             completed = True
             break
 
-    (_, _, _, _, _, sent, flits_del, start_c, done_c, _) = carry
+    (_, _, _, _, _, sent, flits_del, start_c, done_c, _, ts) = carry
     return _workload_result(wl, cfg, ep_of_rank,
                             (sent, flits_del, start_c, done_c),
-                            np.concatenate(per_cycle_dlv), completed, t)
+                            np.concatenate(per_cycle_dlv), completed, t,
+                            tel_state=ts)
 
 
 def _sweep_run_workload(tables: SimTables, wl: Workload,
@@ -476,8 +510,9 @@ def _sweep_run_workload(tables: SimTables, wl: Workload,
         _cache_put(_RUNNER_CACHE, key, (wl, tab0, fn))
 
     lanes0 = [init_carry(jax.random.PRNGKey(s)) for s in seeds_l]
-    carry = tuple(jnp.stack([l[i] for l in lanes0])
-                  for i in range(len(lanes0[0])))
+    # tree_map (not a per-element jnp.stack): the telemetry carry
+    # element is a nested pytree — or () when telemetry is off
+    carry = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *lanes0)
     table_ops = SwitchCore.device_tables(tables) if tables_vary else None
 
     M = wl.n_messages
@@ -495,12 +530,13 @@ def _sweep_run_workload(tables: SimTables, wl: Workload,
         if done_lane.all():
             break
 
-    (_, _, _, _, _, sent, flits_del, start_c, done_c, _) = carry
+    (_, _, _, _, _, sent, flits_del, start_c, done_c, _, ts) = carry
     dlv_all = np.concatenate(per_cycle_dlv, axis=1)             # [L, t]
     out = []
     for i in range(L):
+        ts_i = jax.tree_util.tree_map(lambda a, i=i: a[i], ts)
         out.append(_workload_result(
             wl, cfgs[i], ep_of_rank,
             (sent[i], flits_del[i], start_c[i], done_c[i]),
-            dlv_all[i], bool(done_lane[i]), t))
+            dlv_all[i], bool(done_lane[i]), t, tel_state=ts_i))
     return out

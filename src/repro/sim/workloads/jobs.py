@@ -42,8 +42,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...core.layout import make_layout
+from .. import telemetry as tel
 from ..engine import BIG
 from ..tables import SimTables
+from ..telemetry import TelemetrySnapshot
 from .closed_loop import WorkloadSimConfig, _space_runner
 from .ir import Workload
 from .mapping import place_ranks
@@ -122,6 +124,7 @@ class MultiJobResult:
     makespan: float                   # last job completion; inf if not
     flits_delivered: int
     per_cycle_delivered: np.ndarray   # [cycles_run]
+    telemetry: Optional[TelemetrySnapshot] = None
 
     def job(self, name: str) -> JobResult:
         for jr in self.jobs:
@@ -249,7 +252,7 @@ def run_jobs(tables: SimTables, jobs: Sequence[Job],
             carry = carry[:4] + (jnp.asarray(admit.astype(np.int32)),) \
                 + carry[5:]
 
-    (_, _, _, _, _, sent, flits_del, start_c, done_c, _) = carry
+    (_, _, _, _, _, sent, flits_del, start_c, done_c, _, ts) = carry
     start_c = np.asarray(start_c, dtype=np.int64)
     done_c = np.asarray(done_c, dtype=np.int64)
     flits_del = np.asarray(flits_del, dtype=np.int64)
@@ -287,4 +290,5 @@ def run_jobs(tables: SimTables, jobs: Sequence[Job],
         jobs=tuple(job_results), policy=policy, queue=queue,
         mode=cfg.mode, completed=completed, cycles_run=cycles_run,
         makespan=makespan, flits_delivered=int(flits_del.sum()),
-        per_cycle_delivered=per_cycle)
+        per_cycle_delivered=per_cycle,
+        telemetry=tel.snapshot(cfg.telemetry, ts, cycles_run))

@@ -26,6 +26,7 @@ import numpy as np
 from ...core.topology import Topology
 from ...dist.topology_aware import FabricModel
 from ..engine import _cache_put
+from ..telemetry import export
 from .closed_loop import WorkloadResult
 from .ir import Workload
 
@@ -72,6 +73,9 @@ class WorkloadReport:
             lines.append(f"{ph.name:16s} {ph.n_messages:6d} "
                          f"{ph.latency_mean:8.1f} {ph.latency_p50:8.1f} "
                          f"{ph.latency_p99:8.1f}")
+        if r.telemetry is not None and r.telemetry.counters is not None:
+            lines.extend(export.telemetry_summary(r.telemetry.counters,
+                                                  top=5))
         return "\n".join(lines)
 
 
