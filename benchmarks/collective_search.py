@@ -1,0 +1,141 @@
+"""Sweep-driven collective schedule search (DESIGN.md §13): can the
+simulator OPTIMISE a schedule, not just replay it?
+
+`repro.sim.workloads.search.local_search` hill-climbs over emission
+genomes (chunk count, path set, path seed, entry order) for a ring
+all-reduce on Slim Fly; every generation of candidates is emitted via
+`repro.dist.collectives.emit_policy`, lowered to source-routed engine
+operands, and scored in ONE lane-batched `sweep_run_policies` launch —
+with pinned pad shapes the entire search costs a single compile, so
+the figure of merit is schedules scored per second.
+
+Reported per (q, collective): ring-baseline makespan (the unchunked
+MIN-path schedule), best-found makespan, speedup (>= 1 by
+construction — the baseline rides in generation 0), candidates scored
+and the scoring rate.
+
+fast mode: SF q=5 and q=7, 3 generations x 8 lanes.
+REPRO_SMOKE=1: q=5 only, 2 generations (CI pipeline exercise).
+REPRO_FULL=1: adds q=7 at 16 ranks and more generations.
+
+Run directly (``python -m benchmarks.collective_search``) it also
+appends a ``search/q5/allreduce`` entry to BENCH_engine.json
+(best-found vs ring-baseline makespan, schedules-scored-per-sec;
+REPRO_BENCH_OUT overrides the path — indirect runs never touch the
+committed baseline).
+"""
+
+import os
+
+import numpy as np
+
+from repro.core import build_slimfly
+from repro.core.routing import build_routing
+from repro.sim import SimTables
+from repro.sim.workloads import local_search
+from repro.sim.workloads.search import search_config
+
+KIND = "ring_all_reduce"
+
+
+def _search_point(q: int, ranks: int, chunk_flits: int,
+                  generations: int, lanes: int, max_chunks: int = 4,
+                  seed: int = 0):
+    topo = build_slimfly(q)
+    rt = build_routing(topo, use_pallas=False)
+    tables = SimTables.build(topo, rt)
+    cfg = search_config(chunk=64, kernel_path="ref")
+    return local_search(tables, rt, KIND, ranks, chunk_flits, cfg,
+                        generations=generations, lanes=lanes,
+                        max_chunks=max_chunks, seed=seed)
+
+
+def run(fast: bool = True):
+    full = os.environ.get("REPRO_FULL", "0") == "1" or not fast
+    smoke = os.environ.get("REPRO_SMOKE", "0") == "1" and not full
+
+    if full:
+        points = [(5, 8, 16, 4, 8), (7, 16, 16, 4, 8)]
+    elif smoke:
+        points = [(5, 8, 16, 2, 8)]
+    else:
+        points = [(5, 8, 16, 3, 8), (7, 12, 16, 2, 8)]
+
+    rows = []
+    for q, ranks, chunk_flits, generations, lanes in points:
+        res = _search_point(q, ranks, chunk_flits, generations, lanes)
+        assert res.best.makespan <= res.baseline.makespan, \
+            (res.best, res.baseline)       # baseline rides in gen 0
+        rows.append(dict(
+            name=f"search/q{q}/allreduce",
+            derived=res.best.makespan,
+            baseline=res.baseline.makespan,
+            speedup=round(res.speedup, 4),
+            best=res.best.genome.label(),
+            scored=res.n_scored,
+            schedules_per_sec=round(res.schedules_per_sec, 2),
+            lanes=lanes))
+    return rows
+
+
+def _append_bench_entry(out_path: str) -> None:
+    """Time the warm q=5 schedule search (compile amortised away by a
+    first run through the shared sweep cache) and append a
+    ``search/q5/allreduce`` entry to the BENCH_engine.json trajectory."""
+    from repro.bench import bench_callable, load_bench
+
+    topo = build_slimfly(5)
+    rt = build_routing(topo, use_pallas=False)
+    tables = SimTables.build(topo, rt)
+    cfg = search_config(chunk=64, kernel_path="ref")
+
+    res = {}
+
+    def fn():
+        res["r"] = local_search(tables, rt, KIND, 8, 16, cfg,
+                                generations=3, lanes=8)
+
+    fn()                                  # compile outside the probe
+    r = res["r"]
+    entry = bench_callable(
+        "search/q5/allreduce", fn, repeats=3, measure_memory="rss",
+        meta=dict(kind=KIND, ranks=8, lanes=8, generations=3,
+                  baseline_makespan=r.baseline.makespan,
+                  best_makespan=r.best.makespan,
+                  best=r.best.genome.label(),
+                  speedup=round(r.speedup, 4),
+                  n_scored=res["r"].n_scored,
+                  schedules_per_sec=round(r.schedules_per_sec, 2)))
+
+    import json
+    try:
+        doc = load_bench(out_path)
+    except FileNotFoundError:
+        doc = {"schema": 1, "suite": "engine_scaling", "backend": "cpu",
+               "meta": {}, "entries": {}}
+    doc["entries"][entry.name] = entry.to_json()
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# appended search/q5/allreduce to {out_path}: "
+          f"best={r.best.makespan} baseline={r.baseline.makespan} "
+          f"sched/s={r.schedules_per_sec:.2f}")
+
+
+def main() -> None:
+    from repro.bench import enable_compilation_cache
+    enable_compilation_cache()
+    for row in run(fast=True):
+        extras = {k: v for k, v in row.items()
+                  if k not in ("name", "derived")}
+        suffix = ";".join(f"{k}={v}" for k, v in extras.items())
+        print(f"{row['name']},{row['derived']}"
+              + (f" [{suffix}]" if suffix else ""))
+    # only a direct invocation may touch the committed baseline, same
+    # rule as benchmarks/engine_scaling.py
+    out = os.environ.get("REPRO_BENCH_OUT", "BENCH_engine.json")
+    _append_bench_entry(out)
+
+
+if __name__ == "__main__":
+    main()

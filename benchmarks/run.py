@@ -25,6 +25,7 @@ MODULES = [
     "engine_scaling",
     "table4_cost",
     "topology_collectives",
+    "collective_search",
     "roofline_bench",
     "telemetry_export",
 ]

@@ -154,16 +154,25 @@ def assign_vcs(path: Sequence[int]) -> List[int]:
 
 
 def channel_dependency_graph(paths: Sequence[Sequence[int]],
-                             n_routers: int) -> Tuple[np.ndarray, int]:
-    """Build the CDG over (directed channel, VC) nodes for a path set with
-    hop-indexed VCs.  Returns (edge list [E, 2], n_nodes).
+                             n_routers: int,
+                             vcs_of: Optional[Sequence[Sequence[int]]] = None
+                             ) -> Tuple[np.ndarray, int]:
+    """Build the CDG over (directed channel, VC) nodes for a path set.
+
+    ``vcs_of``, when given, supplies the per-hop VC list of each path
+    (len(path) - 1 entries) — e.g. the ENGINE's clamped assignment
+    ``min(vc_class + hop, V - 1)`` for explicit-path collective
+    policies, where VC reuse past V hops can close cycles that the
+    unclamped hop-indexed scheme provably cannot.  Default: the
+    unclamped hop-indexed assignment (`assign_vcs`).
 
     Node id for channel (u -> v) on vc: vc * N_r^2 + u * N_r + v (dense ids,
     sparse usage)."""
     deps = set()
     max_vc = 0
-    for path in paths:
-        vcs = assign_vcs(path)
+    for pi, path in enumerate(paths):
+        vcs = assign_vcs(path) if vcs_of is None else list(vcs_of[pi])
+        assert len(vcs) == len(path) - 1, (len(vcs), len(path))
         if vcs:
             max_vc = max(max_vc, max(vcs))
         for i in range(len(path) - 2):
@@ -176,10 +185,12 @@ def channel_dependency_graph(paths: Sequence[Sequence[int]],
     return edges, n_nodes
 
 
-def is_deadlock_free(paths: Sequence[Sequence[int]], n_routers: int) -> bool:
+def is_deadlock_free(paths: Sequence[Sequence[int]], n_routers: int,
+                     vcs_of: Optional[Sequence[Sequence[int]]] = None
+                     ) -> bool:
     """Kahn topological sort on the CDG: acyclic <=> deadlock-free under
-    the hop-indexed VC assignment."""
-    edges, _ = channel_dependency_graph(paths, n_routers)
+    the given VC assignment (hop-indexed when ``vcs_of`` is omitted)."""
+    edges, _ = channel_dependency_graph(paths, n_routers, vcs_of)
     if len(edges) == 0:
         return True
     nodes, inv = np.unique(edges, return_inverse=True)

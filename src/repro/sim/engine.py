@@ -78,7 +78,7 @@ from ..core.routing import UNREACH
 from ..kernels import alloc_rounds, ugal_select
 from . import telemetry as tel
 from .packed import (MAX_ROUTERS, PK, bump_hops_word, pack_record, pk_dst,
-                     pk_hops, pk_inter, pk_phase, pk_time)
+                     pk_hops, pk_inter, pk_msg, pk_phase, pk_time)
 from .tables import SimTables
 from .telemetry import TelemetryConfig, TelemetrySnapshot
 from .traffic import Traffic
@@ -188,6 +188,10 @@ class SwitchCore:
         self.use_pallas = (kp == "pallas"
                            or (kp == "auto"
                                and jax.default_backend() == "tpu"))
+        # table-routed by default; bind_source_routes switches a copy
+        # into source-routed mode (explicit per-message paths)
+        self.src_route = None
+        self.src_to_gid = None
 
         # narrow on-device tables (DESIGN.md §9): the O(N^2) tables are
         # int16 (ids < 2^15 asserted above) and gathered values are
@@ -250,6 +254,26 @@ class SwitchCore:
         c = copy.copy(self)
         for name, arr in ops.items():
             setattr(c, name, arr)
+        return c
+
+    def bind_source_routes(self, route_port, vc_base,
+                           to_gid=None) -> "SwitchCore":
+        """Shallow copy in SOURCE-ROUTED mode (DESIGN.md §13).
+
+        `route_port [M, H]` gives the output port message m takes at
+        hop h (indexed by the packed hop counter); a negative entry
+        means "this router is the terminal hop — eject".  `vc_base [M]`
+        is the message's VC class: hop h rides VC
+        ``min(vc_base + h, V - 1)``.  `to_gid` maps the packed MSG
+        field to a route_port row (identity when message ids are
+        global).  Route choice from the routing tables is bypassed
+        entirely; occupancy/credits, W-round allocation, compaction and
+        ejection machinery are unchanged.  Both arrays may be closure
+        constants (single-lane) or traced operands (the schedule-search
+        lane sweep, which varies them per lane)."""
+        c = copy.copy(self)
+        c.src_route = (route_port, vc_base)
+        c.src_to_gid = to_gid if to_gid is not None else (lambda f: f)
         return c
 
     # -- queue state ---------------------------------------------------------
@@ -351,6 +375,8 @@ class SwitchCore:
 
     # -- allocation ----------------------------------------------------------
     def _desires(self, pkt, router, occ):
+        if self.src_route is not None:
+            return self._desires_src(pkt)
         dst, inter, phase = pk_dst(pkt), pk_inter(pkt), pk_phase(pkt)
         tgt = jnp.where(phase == 1, dst, inter)
         eject = (dst == router) & (phase == 1)
@@ -379,6 +405,25 @@ class SwitchCore:
         else:
             out_port = min_port
         out_vc = jnp.minimum(pk_hops(pkt), self.V - 1)
+        return out_port, out_vc, eject
+
+    def _desires_src(self, pkt):
+        """Source-routed desires: the packet's own path table decides.
+
+        Hop h of message m wants `route_port[gid, h]`; a negative port
+        is the eject sentinel at the path's terminal router.  Garbage
+        records in zero-initialised queue slots read row 0 harmlessly:
+        the allocation kernel masks every request by the cycle-start
+        queue depth, so out-of-count slots can never be granted."""
+        route_port, vc_base = self.src_route
+        M, H = route_port.shape[-2], route_port.shape[-1]
+        hops = pk_hops(pkt)
+        gid = jnp.clip(self.src_to_gid(pk_msg(pkt)), 0, M - 1)
+        out_port = route_port[gid, jnp.minimum(hops, H - 1)]
+        out_port = out_port.astype(jnp.int32)
+        eject = out_port < 0
+        out_vc = jnp.minimum(vc_base[gid].astype(jnp.int32) + hops,
+                             self.V - 1)
         return out_port, out_vc, eject
 
     def alloc(self, nq_pkt, nq_count, sq_pkt, sq_count,

@@ -51,7 +51,8 @@ from .engine import (SimConfig, SimResult, SwitchCore, _assemble_result,
 from .tables import SimTables
 from .traffic import Traffic
 
-__all__ = ["sweep_simulate", "sweep_run_workload", "lane_tables"]
+__all__ = ["sweep_simulate", "sweep_run_workload", "sweep_run_policies",
+           "lane_tables"]
 
 TablesLanes = Union[SimTables, Sequence[SimTables]]
 
@@ -227,3 +228,23 @@ def sweep_run_workload(tables: TablesLanes, wl, cfg=None,
 
     return closed_loop._sweep_run_workload(
         lane_tables(tables), wl, cfg, seeds=seeds, ep_of_rank=ep_of_rank)
+
+
+def sweep_run_policies(tables: SimTables, wls, cfg=None,
+                       pad_to=None) -> list:
+    """Score L candidate SCHEDULES (lowered PolicyWorkloads) in one
+    lane-batched source-routed run (DESIGN.md §13).
+
+    The inverse lane split of `sweep_run_workload`: the topology is
+    fixed (tables stay closure constants) and the WORKLOAD arrays —
+    sizes, deps, explicit paths, VC classes, per-endpoint order,
+    placement — vary per lane as traced operands.  Candidates are
+    padded to common shapes; pass `pad_to=(M, dmax, kmax, hmax)` to pin
+    the shapes across generations so one compiled executable scores an
+    entire schedule search.  Returns [WorkloadResult] * L, bit-identical
+    per lane to sequential `run_workload(routing='source')` calls.
+    """
+    from .workloads import closed_loop
+
+    return closed_loop._sweep_run_policies(lane_tables(tables), wls, cfg,
+                                           pad_to=pad_to)

@@ -2,25 +2,35 @@
 
 - ir:          message-DAG workload IR + builders (collectives, stencil,
                graph scatter)
+- policy:      explicit-path collective policy IR (DESIGN.md §13):
+               chunked, dependency-triggered, explicitly-routed
+               transfers; lowers to a PolicyWorkload the engine runs
+               source-routed
 - mapping:     logical rank -> endpoint placement schemes
 - closed_loop: dependency-triggered flit injection on the shared
                SwitchCore; chunked lax.scan with early exit
-- jobs:        multi-tenant Job layer: arrival cycles, pack/spread/
-               rack-aware placement, FIFO/backfill admission queue,
-               one closed-loop run over the concatenated job mix
+- jobs:        multi-tenant Job layer: arrival cycles (fixed or
+               Poisson-sampled), pack/spread/rack-aware placement,
+               FIFO/backfill admission queue, one closed-loop run over
+               the concatenated job mix
+- search:      schedule search: lane-batched scoring of candidate
+               policies + a local-search driver
 - report:      makespan / per-phase latency / bandwidth + FabricModel
                cross-validation
 """
 
 from .closed_loop import WorkloadResult, WorkloadSimConfig, run_workload
 from .jobs import (
+    ARRIVALS,
     JOB_PLACEMENTS,
     QUEUE_POLICIES,
     Job,
     JobResult,
     MultiJobResult,
     place_jobs,
+    poisson_arrivals,
     run_jobs,
+    with_arrivals,
 )
 from .ir import (
     Workload,
@@ -28,10 +38,20 @@ from .ir import (
     graph_scatter,
     make_workload,
     recursive_doubling_all_reduce,
+    ring_all_gather,
     ring_all_reduce,
+    ring_reduce_scatter,
     stencil,
 )
 from .mapping import PLACEMENTS, place_ranks
+from .policy import (
+    Policy,
+    PolicyDeadlockError,
+    PolicyEntry,
+    PolicyWorkload,
+    from_transfers,
+)
+from .search import Genome, SearchResult, local_search, search_config
 from .report import (
     WorkloadReport,
     cycle_fabric_model,
@@ -42,11 +62,22 @@ from .report import (
 __all__ = [
     "Workload",
     "ring_all_reduce",
+    "ring_reduce_scatter",
+    "ring_all_gather",
     "recursive_doubling_all_reduce",
     "all_to_all",
     "stencil",
     "graph_scatter",
     "make_workload",
+    "Policy",
+    "PolicyEntry",
+    "PolicyWorkload",
+    "PolicyDeadlockError",
+    "from_transfers",
+    "Genome",
+    "SearchResult",
+    "local_search",
+    "search_config",
     "PLACEMENTS",
     "place_ranks",
     "WorkloadSimConfig",
@@ -57,8 +88,11 @@ __all__ = [
     "MultiJobResult",
     "JOB_PLACEMENTS",
     "QUEUE_POLICIES",
+    "ARRIVALS",
     "place_jobs",
     "run_jobs",
+    "poisson_arrivals",
+    "with_arrivals",
     "WorkloadReport",
     "summarize",
     "cycle_fabric_model",

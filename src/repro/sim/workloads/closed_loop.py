@@ -63,6 +63,12 @@ class WorkloadSimConfig:
     q_net: int = 16
     q_src: int = 64
     mode: str = "min"                 # min | val | ugal_l | ugal_g | ecmp
+    # "table": route choice from the routing tables (the modes above);
+    # "source": per-message explicit paths from a PolicyWorkload's
+    # route_port/vc_base arrays (DESIGN.md §13) — requires mode="min"
+    # (source routing bypasses adaptive choice; injection stays on the
+    # MIN record layout so table-MIN runs stay bit-comparable)
+    routing: str = "table"
     n_val_candidates: int = 4
     lookahead: int = 4
     seed: int = 0
@@ -83,7 +89,11 @@ class WorkloadSimConfig:
                          telemetry=self.telemetry)
 
     def static_key(self) -> tuple:
-        return (self.vcs, self.q_net, self.q_src, self.mode,
+        # `routing` MUST be part of the key: a source-routed and a
+        # table-routed runner for the same (tables, workload) trace
+        # different steps, and sharing a cache slot would silently run
+        # the wrong one (regression test in tests/test_policy.py)
+        return (self.vcs, self.q_net, self.q_src, self.mode, self.routing,
                 self.n_val_candidates, self.lookahead, self.placement,
                 self.chunk, self.kernel_path,
                 self.telemetry.static_key())
@@ -199,6 +209,24 @@ def _build_space(wls: Sequence[Workload],
 _RUNNER_CACHE: dict = {}
 
 
+def _source_operands(wls: Sequence[Workload]) -> tuple:
+    """Concatenated source-routing arrays over a job mix: route_port
+    [Mtot, Hmax] (short paths right-padded with the eject sentinel) and
+    vc_base [Mtot].  Every workload must be a lowered PolicyWorkload."""
+    for j, w in enumerate(wls):
+        if getattr(w, "route_port", None) is None:
+            raise ValueError(
+                f"job {j} ({w.name!r}): routing='source' needs "
+                f"PolicyWorkloads (Policy.lower / emit_policy), got a "
+                f"plain Workload with no route_port")
+    H = max(w.route_port.shape[1] for w in wls)
+    rps = [np.pad(w.route_port,
+                  ((0, 0), (0, H - w.route_port.shape[1])),
+                  constant_values=-1) for w in wls]
+    return (np.concatenate(rps, axis=0).astype(np.int32),
+            np.concatenate([w.vc_base for w in wls]).astype(np.int32))
+
+
 def _space_runner(tables: SimTables, wls: Tuple[Workload, ...],
                   eps: Tuple[np.ndarray, ...], cfg: WorkloadSimConfig):
     """Compiled chunk runner over the concatenated message space of
@@ -240,6 +268,18 @@ def _space_runner(tables: SimTables, wls: Tuple[Workload, ...],
         # queue slots (those are g=False and dropped anyway)
         j = jnp.minimum(field >> MSG_JOB_SHIFT, J - 1)
         return job_off[j] + (field & mid_mask)
+
+    assert cfg.routing in ("table", "source"), cfg.routing
+    if cfg.routing == "source":
+        # explicit paths replace table route choice in the core; the
+        # arrays ride as closure constants here (single schedule), the
+        # schedule-search lane sweep below lifts them into operands
+        assert cfg.mode == "min", \
+            "routing='source' bypasses adaptive route choice; use " \
+            "mode='min' (the paths themselves encode any detour)"
+        rp, vb = _source_operands(wls)
+        core = core.bind_source_routes(jnp.asarray(rp), jnp.asarray(vb),
+                                       to_gid)
 
     def fold(acc, g_net, g_src, pkt_net, pkt_src, cycle):
         # per-message flit accounting; message latency comes from the
@@ -410,6 +450,11 @@ def run_workload(tables: SimTables, wl: Workload,
                  ep_of_rank: Optional[np.ndarray] = None) -> WorkloadResult:
     """Simulate `wl` to completion (or cfg.max_cycles) and report JCT."""
     if ep_of_rank is None:
+        # a lowered PolicyWorkload bakes the placement its explicit
+        # paths assume; honour it in BOTH routing modes so source vs
+        # table comparisons run the same ranks on the same endpoints
+        ep_of_rank = getattr(wl, "ep_of_rank", None)
+    if ep_of_rank is None:
         ep_of_rank = place_ranks(tables, wl.n_ranks, cfg.placement,
                                  seed=cfg.seed)
     ep_of_rank = np.asarray(ep_of_rank, dtype=np.int32)
@@ -455,6 +500,8 @@ def _sweep_run_workload(tables: SimTables, wl: Workload,
     from ..sweep import _lane_count
 
     cfg = cfg or WorkloadSimConfig()
+    if ep_of_rank is None:
+        ep_of_rank = getattr(wl, "ep_of_rank", None)
     seeds_l = ([cfg.seed] if seeds is None
                else [int(s) for s in np.atleast_1d(seeds)])
     L = _lane_count([("tables", tables.lanes), ("seeds", len(seeds_l))])
@@ -539,4 +586,226 @@ def _sweep_run_workload(tables: SimTables, wl: Workload,
             wl, cfgs[i], ep_of_rank,
             (sent[i], flits_del[i], start_c[i], done_c[i]),
             dlv_all[i], bool(done_lane[i]), t, tel_state=ts_i))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# lane-batched policy scoring (schedule search, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def _policy_sweep_runner(tables: SimTables, cfg: WorkloadSimConfig,
+                         M: int, dmax: int, kmax: int, hmax: int,
+                         n_ep: int):
+    """Compiled lane-batched SOURCE-ROUTED runner whose WORKLOAD arrays
+    are traced operands: one executable scores any generation of
+    candidate schedules padded to the common shapes (M messages, dmax
+    dep fan-in, kmax messages/endpoint, hmax path hops).
+
+    This is the §10 lane contract pushed one level further: lanes here
+    vary not just rate/seed/mask DATA but the schedule itself —
+    size/dep/dst_r/msgs_by_ep/route_port/vc_base all become per-lane
+    operands, while the routing tables stay closure constants (the
+    search fixes one topology).  Per-lane results are bit-identical to
+    single-lane `run_workload(routing='source')` calls on the same
+    padded arrays (tests/test_policy.py).
+    """
+    key = ("policy-sweep", id(tables), cfg.static_key(),
+           M, dmax, kmax, hmax)
+    hit = _RUNNER_CACHE.get(key)
+    if hit is not None and hit[0] is tables:
+        return hit[2]
+
+    assert cfg.routing == "source" and cfg.mode == "min"
+    assert not cfg.telemetry.enabled, \
+        "schedule search runs with telemetry off (per-lane traces of " \
+        "operand-varying workloads are not supported)"
+    core = SwitchCore(tables, cfg.to_sim_config())
+    assert n_ep == core.n_ep
+    Qs, eids = core.Qs, core.eids
+    mid_mask = jnp.int32(MAX_JOB_MSGS - 1)
+
+    def to_gid(field):
+        # single-job id space: MSG field == global message id (the
+        # mask only launders garbage in zero-initialised queue slots)
+        return field & mid_mask
+
+    def run_chunk(ops, carry, offset):
+        c = core.bind_source_routes(ops["route_port"], ops["vc_base"],
+                                    to_gid)
+        size, dep = ops["size"], ops["dep"]
+        dst_r_of_msg, msgs_by_ep = ops["dst_r"], ops["msgs_by_ep"]
+
+        def fold(acc, g_net, g_src, pkt_net, pkt_src, cyc):
+            flits_del, delivered = acc
+            mn = jnp.where(g_net, to_gid(pk_msg(pkt_net)), M)
+            ms = jnp.where(g_src, to_gid(pk_msg(pkt_src)), M)
+            flits_del = flits_del.at[mn.reshape(-1)].add(1, mode="drop")
+            flits_del = flits_del.at[ms].add(1, mode="drop")
+            delivered = (delivered + g_net.sum().astype(jnp.int32)
+                         + g_src.sum().astype(jnp.int32))
+            return flits_del, delivered
+
+        def step(carry, cycle):
+            (nq_pkt, nq_count, sq_pkt, sq_count, admit,
+             sent, flits_del, start_c, done_c, key, ts) = carry
+            key, k_rt = jax.random.split(key)
+            occ = c.occupancy(nq_count)
+
+            done = flits_del >= size
+            dep_ok = jnp.where(dep >= 0, done[jnp.maximum(dep, 0)],
+                               True).all(axis=1)
+            sendable = dep_ok & (sent < size) & (cycle >= admit[0])
+            cand = (msgs_by_ep >= 0) & sendable[jnp.maximum(msgs_by_ep, 0)]
+            has = cand.any(axis=1)
+            # first sendable slot in the ROW ORDER of msgs_by_ep — the
+            # entry-ordering knob the search permutes per lane
+            slot = jnp.argmax(cand, axis=1)
+            mpick = jnp.where(has, msgs_by_ep[eids, slot], 0)
+
+            want = has & (sq_count < Qs)
+            dst_r = dst_r_of_msg[mpick]
+            inter, phase = c.route_decision(dst_r, occ, k_rt)
+            new_pkt = pack_record(dst_r, inter, cycle,
+                                  jnp.zeros((n_ep,), jnp.int32), phase,
+                                  msg=mpick)
+            sq_pkt, sq_count = c.inject(sq_pkt, sq_count, want, new_pkt)
+            msel = jnp.where(want, mpick, M)
+            sent = sent.at[msel].add(1, mode="drop")
+            start_c = start_c.at[msel].min(cycle, mode="drop")
+
+            (nq_pkt, nq_count, sq_pkt, sq_count,
+             (flits_del, delivered), ts) = c.alloc(
+                 nq_pkt, nq_count, sq_pkt, sq_count,
+                 occ, cycle, fold, (flits_del, jnp.int32(0)),
+                 tel_state=ts)
+
+            now_done = flits_del >= size
+            done_c = jnp.where(now_done & (done_c == BIG), cycle + 1,
+                               done_c)
+            n_done = now_done.astype(jnp.int32).sum()[None]     # [J=1]
+            stats = (want.sum().astype(jnp.int32), delivered, n_done)
+            return (nq_pkt, nq_count, sq_pkt, sq_count, admit,
+                    sent, flits_del, start_c, done_c, key, ts), stats
+
+        cycles = offset + jnp.arange(cfg.chunk, dtype=jnp.int32)
+        return jax.lax.scan(step, carry, cycles)
+
+    def init_carry(key0):
+        return core.init_queues() + (
+            jnp.zeros((1,), jnp.int32),                 # admit (cycle 0)
+            jnp.zeros((M,), jnp.int32),                 # sent
+            jnp.zeros((M,), jnp.int32),                 # flits_delivered
+            jnp.full((M,), BIG, jnp.int32),             # start cycle
+            jnp.full((M,), BIG, jnp.int32),             # done cycle
+            key0,
+            tel.init_state(cfg.telemetry, core))        # () — tel off
+
+    ops_axes = {"size": 0, "dep": 0, "dst_r": 0, "msgs_by_ep": 0,
+                "route_port": 0, "vc_base": 0}
+    fn = (jax.jit(jax.vmap(run_chunk, in_axes=(ops_axes, 0, None)),
+                  donate_argnums=(1,)), init_carry)
+    _cache_put(_RUNNER_CACHE, key, (tables, None, fn))
+    return fn
+
+
+def _policy_operands(wl, M: int, dmax: int, kmax: int, hmax: int,
+                     n_ep: int) -> dict:
+    """One candidate's step operands, padded to the generation's common
+    shapes.  Pad messages get size 0: 'done' from cycle one (0 >= 0)
+    yet never sendable (sent < 0 is false), so they are inert and the
+    all-done count M is lane-uniform."""
+    m = wl.n_messages
+    assert m <= M and wl.route_port.shape[1] <= hmax
+    size = np.zeros(M, np.int32)
+    size[:m] = wl.size
+    dep = np.full((M, dmax), -1, np.int32)
+    d = wl.dep_matrix()
+    assert d.shape[1] <= dmax
+    dep[:m, :d.shape[1]] = d
+    dst_r = np.zeros(M, np.int32)
+    dst_r[:m] = wl.dst_r_of_msg
+    rp = np.full((M, hmax), -1, np.int32)
+    rp[:m, :wl.route_port.shape[1]] = wl.route_port
+    vb = np.zeros(M, np.int32)
+    vb[:m] = wl.vc_base
+    src_ep = wl.src_ep_of_msg
+    mbe = np.full((n_ep, kmax), -1, np.int32)
+    for e in range(n_ep):
+        v = np.nonzero(src_ep == e)[0]
+        assert len(v) <= kmax
+        mbe[e, :len(v)] = v
+    return {"size": size, "dep": dep, "dst_r": dst_r, "msgs_by_ep": mbe,
+            "route_port": rp, "vc_base": vb}
+
+
+def _sweep_run_policies(tables: SimTables, wls: Sequence[Workload],
+                        cfg: Optional[WorkloadSimConfig] = None,
+                        pad_to: Optional[tuple] = None) -> list:
+    """Score L candidate schedules (lowered PolicyWorkloads) in ONE
+    lane-batched source-routed run — the fitness evaluator behind
+    `repro.sim.workloads.search` (exposed as
+    `repro.sim.sweep.sweep_run_policies`).
+
+    Candidates may differ in message count, chunking, dependency
+    structure, paths, VC classes, per-endpoint ordering and placement:
+    everything is padded to common shapes (`pad_to` = (M, dmax, kmax,
+    hmax) pins them across generations so the whole search reuses one
+    compiled executable) and varied per lane as traced operands.
+    Returns one WorkloadResult per candidate, bit-identical to
+    sequential `run_workload(routing='source')` calls.
+    """
+    cfg = cfg or WorkloadSimConfig(routing="source")
+    assert tables.lanes == 1, \
+        "policy sweeps vary the SCHEDULE per lane; topology is fixed"
+    wls = list(wls)
+    assert wls, "empty candidate list"
+    n_ep = tables.n_endpoints
+    for w in wls:
+        if getattr(w, "route_port", None) is None:
+            raise ValueError(f"{w.name!r}: candidates must be lowered "
+                             f"PolicyWorkloads")
+        w.dst_r_of_msg = tables.ep_router[
+            w.ep_of_rank[w.dst]].astype(np.int32)
+        w.src_ep_of_msg = w.ep_of_rank[w.src].astype(np.int32)
+
+    need = (max(w.n_messages for w in wls),
+            max(w.dep_matrix().shape[1] for w in wls),
+            max(int(np.bincount(w.src_ep_of_msg,
+                                minlength=n_ep).max()) for w in wls),
+            max(w.route_port.shape[1] for w in wls))
+    if pad_to is None:
+        pad_to = need
+    assert all(p >= n for p, n in zip(pad_to, need)), (pad_to, need)
+    M, dmax, kmax, hmax = pad_to
+
+    fn, init_carry = _policy_sweep_runner(tables, cfg, M, dmax, kmax,
+                                          hmax, n_ep)
+    ops_l = [_policy_operands(w, M, dmax, kmax, hmax, n_ep) for w in wls]
+    ops = {k: jnp.asarray(np.stack([o[k] for o in ops_l]))
+           for k in ops_l[0]}
+    lanes0 = [init_carry(jax.random.PRNGKey(cfg.seed)) for _ in wls]
+    carry = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *lanes0)
+
+    L = len(wls)
+    per_cycle_dlv = []
+    done_lane = np.zeros(L, dtype=bool)
+    t = 0
+    while t < cfg.max_cycles:
+        carry, (inj, dlv, n_done) = fn(ops, carry, jnp.int32(t))
+        per_cycle_dlv.append(np.asarray(dlv, dtype=np.int64))
+        t += cfg.chunk
+        done_lane = np.asarray(n_done)[:, -1, 0] == M
+        if done_lane.all():
+            break
+
+    (_, _, _, _, _, sent, flits_del, start_c, done_c, _, _) = carry
+    dlv_all = np.concatenate(per_cycle_dlv, axis=1)
+    out = []
+    for i, w in enumerate(wls):
+        m = w.n_messages
+        out.append(_workload_result(
+            w, cfg, w.ep_of_rank,
+            (sent[i][:m], flits_del[i][:m], start_c[i][:m],
+             done_c[i][:m]),
+            dlv_all[i], bool(done_lane[i]), t))
     return out

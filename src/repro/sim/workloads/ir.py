@@ -34,6 +34,8 @@ import numpy as np
 __all__ = [
     "Workload",
     "ring_all_reduce",
+    "ring_reduce_scatter",
+    "ring_all_gather",
     "recursive_doubling_all_reduce",
     "all_to_all",
     "stencil",
@@ -105,6 +107,20 @@ def _finalize(name, n_ranks, rows, phase_names) -> Workload:
 # collectives
 # ---------------------------------------------------------------------------
 
+def _ring_rows(k: int, chunk_flits: int, n_steps: int,
+               phase_of_step) -> list:
+    """`n_steps` serialized neighbour rounds of the NCCL ring: at step s
+    rank r forwards one chunk to (r+1)%k, gated on the chunk it
+    received at step s-1 from (r-1)%k."""
+    rows = []
+    for s in range(n_steps):
+        for r in range(k):
+            deps = [] if s == 0 else [(s - 1) * k + (r - 1) % k]
+            rows.append((r, (r + 1) % k, chunk_flits, deps,
+                         phase_of_step(s)))
+    return rows
+
+
 def ring_all_reduce(n_ranks: int, chunk_flits: int) -> Workload:
     """NCCL-style ring: 2(k-1) steps; at step s rank r forwards one
     payload/k chunk to (r+1)%k, gated on the chunk it received at step
@@ -112,14 +128,30 @@ def ring_all_reduce(n_ranks: int, chunk_flits: int) -> Workload:
     the modelled per-participant payload is k*chunk_flits."""
     k = n_ranks
     assert k >= 2
-    rows = []
-    for s in range(2 * (k - 1)):
-        for r in range(k):
-            deps = [] if s == 0 else [(s - 1) * k + (r - 1) % k]
-            phase = 0 if s < k - 1 else 1
-            rows.append((r, (r + 1) % k, chunk_flits, deps, phase))
+    rows = _ring_rows(k, chunk_flits, 2 * (k - 1),
+                      lambda s: 0 if s < k - 1 else 1)
     return _finalize(f"ring_all_reduce(k={k},c={chunk_flits})", k, rows,
                      ("reduce_scatter", "all_gather"))
+
+
+def ring_reduce_scatter(n_ranks: int, chunk_flits: int) -> Workload:
+    """The first half of the ring all-reduce alone: k-1 neighbour steps
+    after which rank r owns the reduced chunk (r+1)%k."""
+    k = n_ranks
+    assert k >= 2
+    rows = _ring_rows(k, chunk_flits, k - 1, lambda s: 0)
+    return _finalize(f"ring_reduce_scatter(k={k},c={chunk_flits})", k,
+                     rows, ("reduce_scatter",))
+
+
+def ring_all_gather(n_ranks: int, chunk_flits: int) -> Workload:
+    """The second half alone: each rank starts owning one chunk and
+    circulates it k-1 neighbour steps until everyone holds all k."""
+    k = n_ranks
+    assert k >= 2
+    rows = _ring_rows(k, chunk_flits, k - 1, lambda s: 0)
+    return _finalize(f"ring_all_gather(k={k},c={chunk_flits})", k,
+                     rows, ("all_gather",))
 
 
 def recursive_doubling_all_reduce(n_ranks: int, size_flits: int) -> Workload:
@@ -236,6 +268,8 @@ def graph_scatter(n_ranks: int, flits: int, iters: int = 2,
 
 _BUILDERS = {
     "ring_all_reduce": ring_all_reduce,
+    "ring_reduce_scatter": ring_reduce_scatter,
+    "ring_all_gather": ring_all_gather,
     "recdbl_all_reduce": recursive_doubling_all_reduce,
     "all_to_all": all_to_all,
     "stencil": stencil,

@@ -51,10 +51,12 @@ from .ir import Workload
 from .mapping import place_ranks
 
 __all__ = ["Job", "JobResult", "MultiJobResult", "JOB_PLACEMENTS",
-           "QUEUE_POLICIES", "place_jobs", "run_jobs"]
+           "QUEUE_POLICIES", "ARRIVALS", "place_jobs", "run_jobs",
+           "poisson_arrivals", "with_arrivals"]
 
 JOB_PLACEMENTS = ("pack", "spread", "rack-aware")
 QUEUE_POLICIES = ("fifo", "backfill")
+ARRIVALS = ("fixed", "poisson")
 
 # job placement policy -> the place_ranks scheme whose full-fabric
 # permutation defines the allocation order
@@ -131,6 +133,47 @@ class MultiJobResult:
             if jr.name == name:
                 return jr
         raise KeyError(name)
+
+
+def poisson_arrivals(n_jobs: int, rate: float, seed: int = 0,
+                     start: int = 0) -> np.ndarray:
+    """Sample `n_jobs` arrival CYCLES from a Poisson process of `rate`
+    jobs/cycle (i.i.d. exponential inter-arrival gaps, floored to
+    integer cycles — ROADMAP "stochastic arrival processes").
+
+    The samples feed `Job.arrival` host-side only: admission stays a
+    data-only admit-cycle vector inside the compiled step, so a rate
+    or seed sweep reuses one executable (DESIGN.md §10/§11).
+    """
+    assert n_jobs >= 1 and rate > 0
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n_jobs)
+    return (start + np.floor(np.cumsum(gaps))).astype(np.int64)
+
+
+def with_arrivals(jobs: Sequence[Job], arrivals: str = "poisson",
+                  rate: float = 1e-3, seed: int = 0,
+                  offsets: Optional[Sequence[int]] = None) -> Tuple[Job, ...]:
+    """Return `jobs` restamped with sampled (or fixed) arrival cycles,
+    sorted by arrival — ready for `run_jobs` (whose list order is the
+    FIFO order).
+
+    arrivals="poisson": cycles from `poisson_arrivals(len(jobs), rate,
+    seed)`, assigned in list order.  arrivals="fixed": `offsets`
+    verbatim (defaults to each job's existing arrival).
+    """
+    jobs = tuple(jobs)
+    if arrivals not in ARRIVALS:
+        raise ValueError(f"unknown arrivals {arrivals!r}; have {ARRIVALS}")
+    if arrivals == "poisson":
+        cycles = poisson_arrivals(len(jobs), rate, seed)
+    else:
+        cycles = np.asarray([j.arrival for j in jobs] if offsets is None
+                            else list(offsets), dtype=np.int64)
+        assert cycles.shape == (len(jobs),)
+    stamped = [dataclasses.replace(j, arrival=int(c))
+               for j, c in zip(jobs, cycles)]
+    return tuple(sorted(stamped, key=lambda j: j.arrival))
 
 
 def place_jobs(tables: SimTables, jobs: Sequence[Job],

@@ -92,6 +92,15 @@ def test_benchmark_fast_mode(modname, monkeypatch, tmp_path):
         swp = doc["entries"]["sweep/q5/fig6-5pt"]
         assert swp["sweep_points_per_sec"] > 0
         assert swp["meta"]["lanes"] == 5
+    if modname == "collective_search":
+        # schedule search: >= 8 candidates scored per compiled launch
+        # and the best-found schedule never loses to the ring baseline
+        # riding in generation 0 (DESIGN.md §13)
+        for row in rows:
+            assert row["scored"] >= 8, row
+            assert row["derived"] <= row["baseline"], row
+            assert row["speedup"] >= 1.0, row
+            assert row["schedules_per_sec"] > 0, row
     if modname == "faults_sweep":
         # routed resiliency rows plus a completed degraded-JCT row
         names = " ".join(row["name"] for row in rows)

@@ -1,0 +1,278 @@
+"""Explicit-path collective policy IR (DESIGN.md §13): the deadlock
+checker rejects a hand-built cyclic path set under the clamped VC
+assignment, `from_transfers` derives dependency triggers from chunk
+ownership, source-routed MIN reproduces table-routed MIN per-message
+latencies exactly (flit-conservation-clean), the policy round trip
+lands inside the calibrated 2x FabricModel band, the routing-mode flag
+keeps table/source compiles apart in the runner cache, lane-batched
+schedule scoring is bit-exact vs sequential runs, and Poisson arrival
+sampling stays plain data."""
+
+import types
+
+import numpy as np
+import pytest
+from conftest import cached_slimfly
+
+from repro.core.routing import build_routing
+from repro.dist.collectives import emit_policy
+from repro.sim import SimTables
+from repro.sim.sweep import sweep_run_policies
+from repro.sim.workloads import (
+    Job,
+    PolicyDeadlockError,
+    WorkloadSimConfig,
+    fabric_crosscheck,
+    from_transfers,
+    place_ranks,
+    poisson_arrivals,
+    ring_all_reduce,
+    run_jobs,
+    run_workload,
+    with_arrivals,
+)
+
+RANKS, CHUNK = 8, 16
+
+
+@pytest.fixture(scope="module")
+def sf5():
+    topo = cached_slimfly(5)
+    rt = build_routing(topo, use_pallas=False)
+    tab = SimTables.build(topo, rt)
+    ep = place_ranks(tab, RANKS, "linear")
+    return topo, rt, tab, np.asarray(ep, dtype=np.int32)
+
+
+def _ring_policy(rt, tab, ep, **kw):
+    ror = tab.ep_router[ep].astype(np.int64)
+    return emit_policy("ring_all_reduce", rt, RANKS, CHUNK, ror, **kw)
+
+
+# ---------------------------------------------------------------------------
+# deadlock-freedom checker (satellite: CDG under the clamped assignment)
+# ---------------------------------------------------------------------------
+
+# Triangle fabric: three routers, fully cyclic.  The detour path set
+# {0->2->1, 1->0->2, 2->1->0} chains the three channels (0,2) (2,1)
+# (1,0) into a directed CDG cycle when every hop shares one VC.
+_TRI_ADJ = np.array([[0, 1, 1], [1, 0, 1], [1, 1, 0]], dtype=bool)
+_TRI_PATHS = [(0, 2, 1), (1, 0, 2), (2, 1, 0)]
+
+
+def _tri_policy():
+    transfers = [(c, p[0], p[-1], 0, 4, p) for c, p in enumerate(_TRI_PATHS)]
+    initial = [(c, p[0]) for c, p in enumerate(_TRI_PATHS)]
+    return from_transfers("tri", 3, np.arange(3), transfers, initial)
+
+
+def test_deadlock_cycle_rejected_single_vc():
+    """The hand-built cyclic counterexample must be caught: with one VC
+    the clamped assignment puts every hop on VC 0 and the triangle's
+    channel-dependency cycle closes."""
+    pol = _tri_policy()
+    pol.validate(adj=_TRI_ADJ)
+    with pytest.raises(PolicyDeadlockError, match="channel-dependency"):
+        pol.check_deadlock_free(n_routers=3, vcs=1)
+
+
+def test_deadlock_cycle_broken_by_hop_indexed_vcs():
+    """Same paths, two VCs: hop h rides VC min(0 + h, 1), so every CDG
+    edge climbs VC0 -> VC1 and no cycle can close."""
+    _tri_policy().check_deadlock_free(n_routers=3, vcs=2)
+
+
+def test_emit_policy_wires_deadlock_check():
+    """emit_policy must refuse to emit a deadlocking schedule: a
+    callable path_set that detours every ring send the wrong way round
+    the triangle raises through emit_policy at vcs=1, passes at vcs=2,
+    and check_deadlock=False bypasses the gate."""
+    rt = types.SimpleNamespace(adj=_TRI_ADJ,
+                               topo=types.SimpleNamespace(n_routers=3))
+    detour = lambda s, d, rng: (s, 3 - s - d, d)     # via the third router
+    emit = lambda **kw: emit_policy("ring_all_reduce", rt, 3, 4,
+                                    np.arange(3), path_set=detour, **kw)
+    with pytest.raises(PolicyDeadlockError):
+        emit(vcs=1)
+    emit(vcs=2)
+    emit(vcs=1, check_deadlock=False)                # explicit bypass
+
+
+# ---------------------------------------------------------------------------
+# from_transfers: ownership-derived dependency triggers
+# ---------------------------------------------------------------------------
+
+def test_from_transfers_ownership_deps():
+    """An entry fires when its source owns the chunk: initial owners
+    get no deps, forwarded chunks dep on the entry that delivered them,
+    and a source that never obtains the chunk is an error."""
+    ror = np.arange(3)
+    path = lambda s, d: (s, d) if _TRI_ADJ[s, d] else (s, 3 - s - d, d)
+    pol = from_transfers(
+        "fwd", 3, ror,
+        [("c", 0, 1, 0, 4, path(0, 1)),      # owner sends
+         ("c", 1, 2, 0, 4, path(1, 2))],     # forwards once delivered
+        initial_owner=[("c", 0)])
+    assert pol.entries[0].deps == ()
+    assert pol.entries[1].deps == (0,)
+    with pytest.raises(ValueError, match="never"):
+        from_transfers("bad", 3, ror, [("c", 1, 2, 0, 4, path(1, 2))],
+                       initial_owner=[("c", 0)])
+
+
+# ---------------------------------------------------------------------------
+# source-routed vs table-routed MIN: latency-identical, conservation-clean
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def min_runs(sf5):
+    topo, rt, tab, ep = sf5
+    wl = _ring_policy(rt, tab, ep).lower(tab, ep)
+    kw = dict(mode="min", chunk=64, kernel_path="ref", seed=0)
+    r_tab = run_workload(tab, wl, WorkloadSimConfig(**kw))
+    r_src = run_workload(tab, wl, WorkloadSimConfig(routing="source", **kw))
+    return wl, r_tab, r_src
+
+
+def test_source_vs_table_min_latency_identical(min_runs):
+    """On identical (MIN) paths the source-routed engine must reproduce
+    the table-routed engine's per-message start/done cycles exactly —
+    the explicit route_port operand encodes the very same next hops the
+    tables would have produced, and everything else in the trace is
+    shared."""
+    wl, r_tab, r_src = min_runs
+    assert r_tab.completed and r_src.completed
+    assert r_src.makespan == r_tab.makespan
+    np.testing.assert_array_equal(r_src.msg_start, r_tab.msg_start)
+    np.testing.assert_array_equal(r_src.msg_done, r_tab.msg_done)
+
+
+def test_source_mode_flit_conservation(min_runs):
+    """Every injected flit ejects at its destination: delivered flits
+    equal the policy's total in both modes (no flit lost to a bad
+    route_port row or stray eject)."""
+    wl, r_tab, r_src = min_runs
+    total = int(wl.size.sum())
+    assert r_tab.flits_delivered == total
+    assert r_src.flits_delivered == total
+
+
+def test_policy_roundtrip_within_fabric_band(min_runs, sf5):
+    """emit_policy(ring_all_reduce) -> lower -> source-routed run lands
+    within the calibrated 2x FabricModel cross-check band, like the
+    message-DAG ring it lowers from."""
+    topo, rt, tab, ep = sf5
+    _, _, r_src = min_runs
+    cc = fabric_crosscheck(topo, "all_reduce", RANKS * CHUNK, ep,
+                           r_src.makespan)
+    assert 0.5 <= cc["ratio"] <= 2.0, cc
+
+
+# ---------------------------------------------------------------------------
+# routing-mode flag in the static key (cache-collision regression)
+# ---------------------------------------------------------------------------
+
+def test_routing_mode_in_static_key():
+    kw = dict(mode="min", chunk=64, kernel_path="ref")
+    k_tab = WorkloadSimConfig(**kw).static_key()
+    k_src = WorkloadSimConfig(routing="source", **kw).static_key()
+    assert k_tab != k_src
+
+
+def test_no_cache_collision_between_modes(sf5):
+    """Regression: with `routing` missing from static_key, a
+    table-routed compile would be replayed for a source-routed run of
+    the same shapes and silently ignore the explicit paths.  A
+    Valiant-style detour policy (strictly longer paths than MIN) must
+    therefore finish LATER source-routed than the table run it shares
+    every static shape with."""
+    topo, rt, tab, ep = sf5
+
+    def valiant(s, d, rng):
+        nbrs = np.flatnonzero(rt.adj[s])
+        m = int(nbrs[int(rng.integers(len(nbrs)))])
+        if m == d:
+            m = int(nbrs[0]) if int(nbrs[0]) != d else int(nbrs[1])
+        return (s,) + tuple(rt.min_path(m, d))
+
+    wl = _ring_policy(rt, tab, ep, path_set=valiant).lower(tab, ep)
+    kw = dict(mode="min", chunk=64, kernel_path="ref", seed=0)
+    r_tab = run_workload(tab, wl, WorkloadSimConfig(**kw))
+    r_src = run_workload(tab, wl, WorkloadSimConfig(routing="source", **kw))
+    assert r_tab.completed and r_src.completed
+    # same DAG either way, but the detour hops are real only in source
+    # mode: per-message completion must differ
+    assert not np.array_equal(r_src.msg_done, r_tab.msg_done)
+    assert r_src.makespan >= r_tab.makespan
+    assert r_src.flits_delivered == r_tab.flits_delivered == \
+        int(wl.size.sum())
+
+
+# ---------------------------------------------------------------------------
+# lane-batched schedule scoring: bit-exact vs sequential source runs
+# ---------------------------------------------------------------------------
+
+def test_sweep_policies_bitexact_vs_sequential(sf5):
+    """Four heterogeneous candidates (chunking, path set, ordering all
+    differ) scored in ONE lane-batched run must match four sequential
+    source-routed `run_workload` calls bit-for-bit."""
+    topo, rt, tab, ep = sf5
+    genomes = [dict(), dict(n_chunks=2), dict(path_set="diverse",
+                                              path_seed=1),
+               dict(n_chunks=4, path_set="diverse", path_seed=2,
+                    order_seed=7)]
+    wls = [_ring_policy(rt, tab, ep, **g).lower(tab, ep) for g in genomes]
+    cfg = WorkloadSimConfig(routing="source", mode="min", chunk=64,
+                            kernel_path="ref", seed=0)
+    lanes = sweep_run_policies(tab, wls, cfg)
+    assert len(lanes) == len(wls)
+    for wl, lane in zip(wls, lanes):
+        ref = run_workload(tab, wl, cfg)
+        assert lane.completed and ref.completed
+        assert lane.makespan == ref.makespan
+        assert lane.flits_delivered == ref.flits_delivered
+        np.testing.assert_array_equal(lane.msg_start, ref.msg_start)
+        np.testing.assert_array_equal(lane.msg_done, ref.msg_done)
+
+
+# ---------------------------------------------------------------------------
+# Poisson arrival sampling (satellite: jobs.py stays data-only)
+# ---------------------------------------------------------------------------
+
+def test_poisson_arrivals_shape():
+    a = poisson_arrivals(64, rate=1e-2, seed=3, start=100)
+    assert a.shape == (64,) and a.dtype == np.int64
+    assert (a >= 100).all()
+    assert (np.diff(a) >= 0).all()                   # cumulative => sorted
+    np.testing.assert_array_equal(a, poisson_arrivals(64, 1e-2, seed=3,
+                                                      start=100))
+    # mean inter-arrival tracks 1/rate
+    gaps = np.diff(poisson_arrivals(4096, 1e-2, seed=0).astype(float))
+    assert 60 <= gaps.mean() <= 140                  # 1/rate = 100
+
+def test_with_arrivals_restamps_jobs():
+    wl = ring_all_reduce(RANKS, CHUNK)
+    jobs = [Job(f"j{i}", wl, arrival=0) for i in range(3)]
+    stamped = with_arrivals(jobs, arrivals="poisson", rate=1e-2, seed=1)
+    arr = [j.arrival for j in stamped]
+    assert arr == sorted(arr)
+    np.testing.assert_array_equal(arr, poisson_arrivals(3, 1e-2, seed=1))
+    with pytest.raises(ValueError):
+        with_arrivals(jobs, arrivals="bursty")
+
+
+def test_poisson_jobs_run_and_serialize(sf5):
+    """Poisson-stamped jobs run through run_jobs (the arrival vector is
+    plain data — one compile regardless of the sampled cycles) and no
+    job starts before its arrival."""
+    topo, rt, tab, ep = sf5
+    wl = ring_all_reduce(RANKS, CHUNK)
+    jobs = with_arrivals([Job("a", wl), Job("b", wl)],
+                         arrivals="poisson", rate=5e-3, seed=2)
+    mj = run_jobs(tab, jobs, WorkloadSimConfig(mode="min", chunk=64,
+                                               kernel_path="ref"),
+                  policy="pack")
+    assert mj.completed
+    for j, jr in zip(jobs, mj.jobs):
+        assert jr.completed
+        assert int(jr.msg_start.min()) >= j.arrival
